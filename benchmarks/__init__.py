@@ -1,0 +1,9 @@
+# One benchmark per paper table/figure (see DESIGN.md §5):
+#   table1_embedding_params  Table I      embedding-layer parameter counts
+#   table2_bcsd              Table II/III BCSD retrieval (MRR / Recall@1)
+#   fig4_intraprogram        Fig 4        SimPoint accuracy: BBV vs SemanticBBV
+#   fig6_crossprogram        Fig 6        14-archetype universal clustering
+#   fig7_adaptation          Fig 7/8      cross-microarchitecture fine-tuning
+#   framework_throughput     §IV-E        blocks/s + signatures/s
+# `python -m benchmarks.run` executes all (artifacts/lab caches make reruns
+# fast). Roofline terms come from the dry-run (repro.launch.dryrun).

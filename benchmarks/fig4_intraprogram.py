@@ -1,0 +1,51 @@
+"""Fig 4: intra-program SimPoint accuracy — traditional BBV vs SemanticBBV.
+
+Evaluated on the FP-like suite (Stage 2 trains on the int-like suite only,
+mirroring the paper's train/eval split). Both signatures get the same
+k-means budget; the traditional BBV additionally gets SimPoint 3.0's
+15-dim random projection.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.simpoint import classic_bbv_matrix, run_simpoint
+from repro.data.perfmodel import INORDER_CPU, interval_cpi
+from repro.data.trace import block_table, trace_program
+
+
+def run(k=10, n_intervals=None):
+    from benchmarks.lab import N_INTERVALS, get_pipeline, get_world
+    n_intervals = n_intervals or N_INTERVALS
+    pipe, _ = get_pipeline()
+    world_fp = get_world("fp", n_intervals)
+    bt = world_fp.block_tbl
+    order = sorted(bt)
+    lens = {b: blk.num_instrs for b, blk in bt.items()}
+    bbe_table = pipe.encode_blocks(list(bt.values()))
+
+    rows = []
+    accs_bbv, accs_sem = [], []
+    for p in world_fp.programs:
+        ivs = world_fp.intervals[p.name]
+        cpis = world_fp.cpi[(INORDER_CPU.name, p.name)]
+        weights = np.array([iv.num_instrs for iv in ivs], np.float64)
+        bbv = classic_bbv_matrix(ivs, order, lens)
+        res_bbv = run_simpoint(bbv, cpis, weights, k=k, project_to=15,
+                               seed=0)
+        sem = pipe.interval_signatures(ivs, bbe_table)
+        res_sem = run_simpoint(sem, cpis, weights, k=k, seed=0)
+        accs_bbv.append(res_bbv.accuracy)
+        accs_sem.append(res_sem.accuracy)
+        rows.append(("fig4", p.name, f"bbv={res_bbv.accuracy:.4f}",
+                     f"sem={res_sem.accuracy:.4f}",
+                     f"diff_pp={100*(res_sem.accuracy-res_bbv.accuracy):+.2f}"))
+    rows.append(("fig4", "AVERAGE", f"bbv={np.mean(accs_bbv):.4f}",
+                 f"sem={np.mean(accs_sem):.4f}",
+                 f"diff_pp={100*(np.mean(accs_sem)-np.mean(accs_bbv)):+.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(r))

@@ -1,0 +1,43 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run table2 fig6  # subset
+
+First run trains + caches the pipeline under artifacts/lab/ (minutes on
+one CPU core); later runs reuse it.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    import benchmarks.fig4_intraprogram as fig4
+    import benchmarks.fig6_crossprogram as fig6
+    import benchmarks.fig7_adaptation as fig7
+    import benchmarks.framework_throughput as thr
+    import benchmarks.table1_embedding_params as t1
+    import benchmarks.table2_bcsd as t2
+
+    suites = {
+        "table1": t1.run,
+        "table2": t2.run,
+        "fig4": fig4.run,
+        "fig6": fig6.run,
+        "fig7": fig7.run,
+        "throughput": thr.run,
+    }
+    want = [a for a in sys.argv[1:] if a in suites] or list(suites)
+    for name in want:
+        t0 = time.monotonic()
+        rows = suites[name]()
+        dt = time.monotonic() - t0
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        print(f"{name},elapsed_s,{dt:.1f}")
+
+
+if __name__ == "__main__":
+    main()

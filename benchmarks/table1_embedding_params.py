@@ -1,0 +1,35 @@
+"""Table I: embedding-layer parameter sizes.
+
+Baselines are the paper's reported numbers (their public tokenizers are
+not runnable offline); ours is computed from the actual tokenizer + the
+Stage-1 configuration used throughout the benchmarks.
+"""
+from __future__ import annotations
+
+from repro.core.tokenizer import default_tokenizer
+
+PAPER_BASELINES_M = {
+    "kTrans": 12.86,
+    "UniASM": 10.75,
+    "jTrans": 2.22,
+    "PalmTree": 0.92,
+    "SemanticBBV (paper)": 0.32,
+}
+
+
+def run(bbe_cfg=None):
+    from benchmarks.lab import BBE_CFG
+    cfg = bbe_cfg or BBE_CFG
+    tok = default_tokenizer()
+    ours = tok.embedding_param_count(cfg.dim_embeds)
+    rows = [("table1", name, f"{m:.2f}M")
+            for name, m in PAPER_BASELINES_M.items()]
+    rows.append(("table1", "Ours (this repro)", f"{ours/1e6:.3f}M"))
+    rows.append(("table1", "ours_vocab_sizes",
+                 "x".join(str(s) for s in tok.spec.dim_sizes)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(r))

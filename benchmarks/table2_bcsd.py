@@ -1,0 +1,118 @@
+"""Table II/III: Binary Code Similarity Detection retrieval.
+
+Query = a function at optimization level A; pool = `pool_size` candidate
+functions at level B (the true counterpart + distractors); metrics = MRR
+and Recall@1 across the paper's six optimization pairs.
+
+Function embedding = L2-normalized mean of its blocks' BBEs.
+
+Offline baselines (the paper's UniASM/kTrans weights are not available):
+  - `untrained`: same encoder, random weights (ablates the training)
+  - `opcode-hist`: classic opcode-histogram similarity (non-neural floor)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.losses import l2_normalize
+from repro.data.corpus import SyntheticBinaryCorp
+from repro.data.isa import OPCODES
+
+OPT_PAIRS = [("O0", "O3"), ("O1", "O3"), ("O2", "O3"),
+             ("O0", "Os"), ("O1", "Os"), ("O2", "Os")]
+
+
+def _function_embedding(pipe, corp, fid, level):
+    ex = corp.encode_function(fid, level)
+    bbes = pipe.encode_tokens(ex.tokens)
+    v = bbes.mean(0)
+    return v / max(np.linalg.norm(v), 1e-9)
+
+
+def _opcode_hist(corp, fid, level):
+    f = corp.function(fid, level)
+    ops = sorted(OPCODES)
+    idx = {o: i for i, o in enumerate(ops)}
+    h = np.zeros(len(ops))
+    for b in f.blocks:
+        for ins in b.instrs:
+            h[idx[ins.opcode]] += 1
+    return h / max(np.linalg.norm(h), 1e-9)
+
+
+def _retrieval(embed_fn, corp, pair, n_queries, pool_size, seed=0):
+    spec = corp.bcsd_pool(pair, n_queries, pool_size, seed)
+    pool = np.stack([embed_fn(corp, int(f), pair[1])
+                     for f in spec["pool_fids"]])
+    mrr = recall1 = 0.0
+    for qpos in spec["query_positions"]:
+        q = embed_fn(corp, int(spec["pool_fids"][qpos]), pair[0])
+        sims = pool @ q
+        rank = int((sims > sims[qpos]).sum()) + 1
+        mrr += 1.0 / rank
+        recall1 += float(rank == 1)
+    n = len(spec["query_positions"])
+    return mrr / n, recall1 / n
+
+
+def run(pool_sizes=(100, 1000), n_queries=50):
+    import jax
+    from benchmarks.lab import BBE_CFG, get_stage1
+    from repro.core.bbe import bbe_init
+    from repro.core.pipeline import SemanticBBVPipeline
+    from repro.core.tokenizer import default_tokenizer
+
+    corp = SyntheticBinaryCorp(n_functions=1200, max_len=BBE_CFG.max_len,
+                               train_frac=0.0)  # eval on unseen functions
+    s1 = get_stage1()
+    tok = default_tokenizer()
+    pipe = SemanticBBVPipeline(tok, BBE_CFG, None, s1["params"], None)
+    rnd_params, _ = bbe_init(jax.random.PRNGKey(99), BBE_CFG)
+    pipe_rnd = SemanticBBVPipeline(tok, BBE_CFG, None, rnd_params, None)
+
+    import os
+    import pickle
+    from benchmarks.lab import ART
+    cache_path = os.path.join(ART, "bcsd_embeddings.pkl")
+    emb_cache = {}
+    if os.path.exists(cache_path):
+        with open(cache_path, "rb") as f:
+            emb_cache = pickle.load(f)
+
+    def cached(embed_fn, name):
+        def fn(corp, fid, level):
+            key = (name, fid, level)
+            if key not in emb_cache:
+                emb_cache[key] = embed_fn(corp, fid, level)
+            return emb_cache[key]
+        return fn
+
+    models = {
+        "ours": cached(lambda c, f, l: _function_embedding(pipe, c, f, l),
+                       "ours"),
+        "untrained": cached(
+            lambda c, f, l: _function_embedding(pipe_rnd, c, f, l), "rnd"),
+        "opcode-hist": cached(lambda c, f, l: _opcode_hist(c, f, l), "hist"),
+    }
+    rows = []
+    for pool_size in pool_sizes:
+        for name, fn in models.items():
+            mrrs, r1s = [], []
+            for pair in OPT_PAIRS:
+                mrr, r1 = _retrieval(fn, corp, pair, n_queries, pool_size)
+                rows.append(("table3", f"{name}@{pool_size}",
+                             f"{pair[0]}/{pair[1]}", f"{mrr:.3f}",
+                             f"{r1:.3f}"))
+                mrrs.append(mrr)
+                r1s.append(r1)
+            rows.append(("table2", f"{name}@{pool_size}", "avg",
+                         f"{np.mean(mrrs):.3f}", f"{np.mean(r1s):.3f}"))
+    os.makedirs(ART, exist_ok=True)
+    with open(cache_path, "wb") as f:
+        pickle.dump(emb_cache, f)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(r))

@@ -1,0 +1,50 @@
+"""Cross-program knowledge reuse (the paper's headline result, Fig 5/6).
+
+    PYTHONPATH=src:. python examples/cross_program_estimation.py
+
+Uses the cached lab pipeline (trains it on first run), pools SemanticBBVs
+from all ten SPEC-int-like programs, clusters into 14 universal
+archetypes, simulates one representative each, and estimates every
+program's CPI from its behavioral fingerprint.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from repro.core.crossprog import speedup, universal_clustering
+from repro.data.perfmodel import INORDER_CPU
+
+
+def main():
+    from benchmarks.lab import get_pipeline
+    pipe, world = get_pipeline()
+    table = pipe.encode_blocks(list(world.block_tbl.values()))
+    sigs, pids, cpis = [], [], []
+    for p in world.programs:
+        ivs = world.intervals[p.name]
+        sigs.append(pipe.interval_signatures(ivs, table))
+        pids += [p.name] * len(ivs)
+        cpis.append(world.cpi[(INORDER_CPU.name, p.name)])
+    X, C = np.concatenate(sigs), np.concatenate(cpis)
+
+    res = universal_clustering(X, pids, C, k=14, seed=0)
+    print(f"{'program':<18}{'accuracy':>9}{'true':>8}{'est':>8}  fingerprint(top3)")
+    for p in sorted(res.est_cpi):
+        f = res.fingerprints[p]
+        top = np.argsort(f)[::-1][:3]
+        fp = " ".join(f"c{t}:{f[t]:.2f}" for t in top)
+        print(f"{p:<18}{res.accuracy(p):>8.1%}{res.true_cpi[p]:>8.2f}"
+              f"{res.est_cpi[p]:>8.2f}  {fp}")
+    print(f"\naverage accuracy: {res.avg_accuracy:.1%}; "
+          f"{res.k} simulated points for {len(C)} intervals "
+          f"= {speedup(len(C), res.k):.0f}x fewer simulated instructions")
+    print("representatives came from:",
+          sorted(set(res.rep_program)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.analysis.hlo_parse import analyze_hlo, HloStats
+from repro.analysis.roofline import roofline_terms, RooflineReport, V5E

@@ -1,0 +1,323 @@
+"""Post-optimization HLO text analyzer.
+
+`compiled.cost_analysis()` visits while-loop bodies ONCE (verified
+empirically), so with scan-over-layers every per-layer cost would be
+undercounted by the trip count. This module re-derives the three roofline
+inputs directly from `compiled.as_text()` (per-device SPMD program):
+
+  - dot FLOPs          (2 × result elems × contracted extent; operand
+                        shapes resolved through a per-computation symbol
+                        table — the scheduled printer does not inline them)
+  - bytes accessed     (Σ operand+result bytes of non-control ops,
+                        fusions counted at their call site)
+  - collective bytes   (per kind: all-reduce / all-gather / reduce-scatter
+                        / all-to-all / collective-permute)
+
+and walks the call graph (while bodies × trip counts parsed from the
+loop-condition constants, calls, fusions, conditionals) so every cost is
+multiplied by the number of times it actually executes.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+# result type: a tuple "( ... )" (may contain /*index=N*/ comments) or a
+# single dtype[shape]{layout} group; then the opcode and its open paren.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[\w\[\],{}:/\* ]+?))\s+"
+    r"([\w\-]+)\((.*)$")
+_CALLED_KW = re.compile(
+    r"(body|condition|to_apply|calls|true_computation|false_computation)="
+    r"%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """(elements, bytes) across every dtype[shape] group in a type string
+    (handles tuples)."""
+    elems = byts = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclass
+class Instruction:
+    name: str
+    result: str
+    opcode: str
+    rest: str
+
+    def operand_names(self) -> List[str]:
+        return _OPERAND_RE.findall(self.rest.split(")")[0])
+
+    def called(self) -> Dict[str, str]:
+        out = {}
+        for kw, name in _CALLED_KW.findall(self.rest):
+            out[kw] = name
+        m = _BRANCHES_RE.search(self.rest)
+        if m:
+            for i, c in enumerate(m.group(1).split(",")):
+                out[f"branch{i}"] = c.strip().lstrip("%")
+        return out
+
+
+@dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    trip_counts: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _parse(text: str):
+    comps: Dict[str, List[Instruction]] = {}
+    entry: Optional[str] = None
+    current: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if line.endswith("{") and "->" in line:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+                continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[current].append(Instruction(
+                name=m.group(1), result=m.group(2).strip(),
+                opcode=m.group(3), rest=m.group(4)))
+    return comps, entry
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "opt-barrier",
+    "copy-start", "copy-done", "iota", "partition-id", "replica-id",
+}
+
+_PASSTHRU = {"bitcast", "convert", "copy", "reshape", "transpose"}
+
+
+def _fusion_io_bytes(instrs: List[Instruction],
+                     types: Dict[str, str]) -> float:
+    """True HBM traffic of a fusion: parameters feeding only slicing ops
+    count at slice size; a root that is (a wrapper around) a
+    dynamic-update-slice writes only the updated region. Without this, a
+    fused `stack[i] = slice_update` inside a scan gets charged the whole
+    stack every iteration."""
+    consumers: Dict[str, List[Instruction]] = {}
+    by_name = {i.name: i for i in instrs}
+    for ins in instrs:
+        for o in _OPERAND_RE.findall(ins.rest.split(")")[0]):
+            consumers.setdefault(o, []).append(ins)
+    read = 0.0
+    for ins in instrs:
+        if ins.opcode != "parameter":
+            continue
+        _, full = _shape_elems_bytes(ins.result)
+        cons = consumers.get(ins.name, [])
+        # follow pure layout wrappers to the real consumers
+        seen = set()
+        real: List[Instruction] = []
+        frontier = list(cons)
+        while frontier:
+            c = frontier.pop()
+            if c.name in seen:
+                continue
+            seen.add(c.name)
+            if c.opcode in _PASSTHRU:
+                frontier.extend(consumers.get(c.name, []))
+            else:
+                real.append(c)
+        if real and all(c.opcode == "dynamic-slice" for c in real):
+            read += sum(_shape_elems_bytes(c.result)[1] for c in real)
+        elif real and all(c.opcode == "dynamic-update-slice"
+                          and c.operand_names()
+                          and c.operand_names()[0] != ins.name
+                          for c in real):
+            # param is the small update operand
+            read += full
+        elif real and all(c.opcode == "dynamic-update-slice"
+                          for c in real):
+            # param is the big aliased buffer: only the updated region
+            # is effectively touched
+            local_types = {i.name: i.result for i in instrs}
+            for c in real:
+                ops = c.operand_names()
+                if len(ops) > 1:
+                    read += _shape_elems_bytes(local_types.get(ops[1], ""))[1]
+        else:
+            read += full
+    # write side: unwrap the root
+    root = instrs[-1] if instrs else None
+    write = _shape_elems_bytes(root.result)[1] if root else 0.0
+    node = root
+    hops = 0
+    while node is not None and node.opcode in _PASSTHRU and hops < 8:
+        ops = node.operand_names()
+        node = by_name.get(ops[0]) if ops else None
+        hops += 1
+    if node is not None and node.opcode == "dynamic-update-slice":
+        ops = node.operand_names()
+        if len(ops) > 1 and ops[1] in by_name:
+            write = _shape_elems_bytes(by_name[ops[1]].result)[1]
+    return read + write
+
+
+def _comp_costs(instrs: List[Instruction], types: Dict[str, str],
+                fusion_io: Optional[Dict[str, float]] = None):
+    flops = 0.0
+    byts = 0.0
+    coll_b: Dict[str, float] = {}
+    coll_c: Dict[str, int] = {}
+    for ins in instrs:
+        _, res_b = _shape_elems_bytes(ins.result)
+        ops = ins.operand_names()
+        # slicing ops only touch the sliced region, not the whole operand —
+        # a loop body dynamic-slicing stacked scan inputs would otherwise
+        # be charged the full stack every iteration (measured: inflated
+        # xlstm train bytes 1000×)
+        if ins.opcode in ("dynamic-slice", "gather", "slice"):
+            op_b = res_b
+        elif ins.opcode == "dynamic-update-slice":
+            upd_b = _shape_elems_bytes(types.get(ops[1], ""))[1] \
+                if len(ops) > 1 else res_b
+            op_b = upd_b
+            res_b = upd_b  # result aliases the big buffer; only the
+            #                updated region is written
+        elif ins.opcode == "scatter":
+            op_b = 2 * res_b
+        else:
+            op_b = sum(_shape_elems_bytes(types.get(o, ""))[1] for o in ops)
+        if ins.opcode == "dot":
+            res_e, _ = _shape_elems_bytes(ins.result)
+            mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+            lhs_type = types.get(ops[0], "") if ops else ""
+            lhs_shapes = _SHAPE_RE.findall(lhs_type)
+            if mm and lhs_shapes:
+                lhs_dims = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+                contracted = 1
+                for ci in mm.group(1).split(","):
+                    if ci and int(ci) < len(lhs_dims):
+                        contracted *= lhs_dims[int(ci)]
+                flops += 2.0 * res_e * contracted
+        kind = next((c for c in COLLECTIVES if ins.opcode.startswith(c)), None)
+        if kind:
+            coll_b[kind] = coll_b.get(kind, 0.0) + res_b
+            coll_c[kind] = coll_c.get(kind, 0) + 1
+        if ins.opcode == "fusion" and fusion_io is not None:
+            called = ins.called().get("calls")
+            if called in fusion_io:
+                byts += fusion_io[called]
+                continue
+        if ins.opcode not in _SKIP_BYTES_OPS:
+            byts += res_b + op_b
+    return flops, byts, coll_b, coll_c
+
+
+def _trip_count(cond_instrs: List[Instruction]) -> int:
+    best = 1
+    for ins in cond_instrs:
+        if ins.opcode == "constant":
+            m = re.match(r"\s*(\d+)", ins.rest)
+            if m and _SHAPE_RE.match(ins.result.replace(" ", "")) \
+                    and "[]" in ins.result:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps, entry = _parse(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    types_per_comp = {
+        name: {i.name: i.result for i in ins} for name, ins in comps.items()
+    }
+    fusion_io = {name: _fusion_io_bytes(ins, types_per_comp[name])
+                 for name, ins in comps.items()}
+    local = {name: _comp_costs(ins, types_per_comp[name], fusion_io)
+             for name, ins in comps.items()}
+
+    # (multiplicity, fused-context multiplicity) per computation. Bytes and
+    # collectives are only counted OUTSIDE fusions: fused interiors live in
+    # VMEM/registers and never round-trip HBM; the fusion call site's
+    # params+result are the real HBM traffic. Dot FLOPs count everywhere.
+    mult: Dict[str, float] = {}
+    fused_mult: Dict[str, float] = {}
+    stats = HloStats()
+
+    def visit(name: str, m: float, fused: bool):
+        if name not in comps or m == 0:
+            return
+        (fused_mult if fused else mult)[name] = \
+            (fused_mult if fused else mult).get(name, 0.0) + m
+        for ins in comps[name]:
+            called = ins.called()
+            if not called:
+                continue
+            if ins.opcode == "while":
+                cond = called.get("condition")
+                body = called.get("body")
+                trip = _trip_count(comps.get(cond, [])) if cond else 1
+                stats.trip_counts[ins.name] = trip
+                if body:
+                    visit(body, m * trip, fused)
+                if cond:
+                    visit(cond, m * (trip + 1), fused)
+            elif ins.opcode in ("call", "conditional"):
+                for cname in called.values():
+                    visit(cname, m, fused)
+            elif ins.opcode in ("fusion", "custom-call"):
+                for cname in called.values():
+                    visit(cname, m, True)
+            # reduce/sort/scatter lambdas are O(1) bodies — skip
+
+    visit(entry, 1.0, False)
+    for name in set(mult) | set(fused_mult):
+        flops, byts, coll_b, coll_c = local[name]
+        m_all = mult.get(name, 0.0) + fused_mult.get(name, 0.0)
+        m_unfused = mult.get(name, 0.0)
+        stats.dot_flops += m_all * flops
+        stats.bytes_accessed += m_unfused * byts
+        for k, v in coll_b.items():
+            stats.collective_bytes[k] = stats.collective_bytes.get(k, 0.0) \
+                + m_unfused * v
+        for k, v in coll_c.items():
+            stats.collective_counts[k] = stats.collective_counts.get(k, 0) \
+                + int(m_unfused * v)
+    return stats

@@ -1,0 +1,61 @@
+"""Render the §Roofline markdown table from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.analysis.report [artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        d = json.load(open(f))
+        rows.append(d)
+    return rows
+
+
+def render(rows, mesh_filter=None) -> str:
+    out = ["| arch | shape | mesh | dom | compute_s | memory_s | collective_s "
+           "| roofline | MFU_ub | useful/HLO | GB/chip | fit |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if mesh_filter and d.get("mesh") != mesh_filter:
+            continue
+        if d["status"].startswith("SKIP"):
+            out.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                       f"{d['status']} | | | | | | | | |")
+            continue
+        if d["status"] != "OK":
+            out.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                       f"FAIL | | | | | | | | |")
+            continue
+        r = d["roofline"]
+        t = r["terms"]
+        gb = (r["argument_bytes"] + r["temp_bytes"]) / 1e9
+        fit = "FITS" if gb < 16 else "OVER"
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {t['dominant']} | "
+            f"{t['compute_s']:.3f} | {t['memory_s']:.2f} | "
+            f"{t['collective_s']:.2f} | {t['roofline_fraction']:.3f} | "
+            f"{t['mfu_upper_bound']:.3f} | {t['useful_flops_ratio']:.3f} | "
+            f"{gb:.1f} | {fit} |")
+    return "\n".join(out)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+    rows = load(d)
+    print(render(rows))
+    ok = sum(1 for r in rows if r["status"] == "OK")
+    skip = sum(1 for r in rows if r["status"].startswith("SKIP"))
+    print(f"\n{ok} OK, {skip} SKIP, "
+          f"{sum(1 for r in rows if r['status'].startswith('FAIL'))} FAIL")
+
+
+if __name__ == "__main__":
+    main()

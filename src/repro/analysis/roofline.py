@@ -1,0 +1,126 @@
+"""Three-term roofline model for the dry-run artifacts (TPU v5e target).
+
+  compute term    = HLO_dot_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes     / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+FLOPs/bytes come from the trip-count-corrected HLO analyzer
+(repro.analysis.hlo_parse); all three are *aggregate over the SPMD
+program* (the HLO text is the per-device program, so parsed quantities
+are per-device — terms therefore divide by 1, see `per_device`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.analysis.hlo_parse import HloStats
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float      # per chip, bf16
+    hbm_bw: float          # bytes/s per chip
+    link_bw: float         # bytes/s per ICI link
+    hbm_bytes: float       # capacity per chip
+
+
+V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+               link_bw=50e9, hbm_bytes=16e9)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # parsed per-device quantities
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, float]
+    # model-level accounting
+    model_flops: float                  # 6·N·D (active params × tokens)
+    # memory fit
+    argument_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    # xla cost_analysis raw (uncorrected, for reference)
+    xla_flops: float = 0.0
+    xla_bytes: float = 0.0
+
+    def terms(self, hw: Hardware = V5E) -> Dict[str, float]:
+        t_compute = self.flops_per_device / hw.peak_flops
+        t_memory = self.bytes_per_device / hw.hbm_bw
+        t_collective = self.collective_bytes_per_device / hw.link_bw
+        dominant = max(("compute", t_compute), ("memory", t_memory),
+                       ("collective", t_collective), key=lambda kv: kv[1])
+        total_hlo_flops = self.flops_per_device * self.chips
+        return {
+            "compute_s": t_compute,
+            "memory_s": t_memory,
+            "collective_s": t_collective,
+            "dominant": dominant[0],
+            "bound_s": dominant[1],
+            # fraction of the roofline-limited time spent on useful math
+            "roofline_fraction": (t_compute / dominant[1]
+                                  if dominant[1] > 0 else 0.0),
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": (self.model_flops / total_hlo_flops
+                                   if total_hlo_flops else 0.0),
+            "mfu_upper_bound": (self.model_flops /
+                                (dominant[1] * self.chips * hw.peak_flops)
+                                if dominant[1] > 0 else 0.0),
+        }
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["terms"] = self.terms()
+        return d
+
+
+def roofline_terms(stats: HloStats, *, arch: str, shape: str, mesh: str,
+                   chips: int, model_flops: float,
+                   memory_analysis=None, cost_analysis: Optional[dict] = None
+                   ) -> RooflineReport:
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        flops_per_device=stats.dot_flops,
+        bytes_per_device=stats.bytes_accessed,
+        collective_bytes_per_device=stats.total_collective_bytes,
+        collective_breakdown=dict(stats.collective_bytes),
+        model_flops=model_flops,
+    )
+    if memory_analysis is not None:
+        rep.argument_bytes = float(
+            getattr(memory_analysis, "argument_size_in_bytes", 0))
+        rep.temp_bytes = float(
+            getattr(memory_analysis, "temp_size_in_bytes", 0))
+    if cost_analysis:
+        rep.xla_flops = float(cost_analysis.get("flops", 0.0))
+        rep.xla_bytes = float(cost_analysis.get("bytes accessed", 0.0))
+    return rep
+
+
+def format_report(rep: RooflineReport, hw: Hardware = V5E) -> str:
+    t = rep.terms(hw)
+    lines = [
+        f"[{rep.arch} × {rep.shape} × {rep.mesh}] {rep.chips} chips "
+        f"({hw.name})",
+        f"  compute    {t['compute_s']*1e3:12.3f} ms "
+        f"({rep.flops_per_device/1e12:.2f} TFLOP/device)",
+        f"  memory     {t['memory_s']*1e3:12.3f} ms "
+        f"({rep.bytes_per_device/1e9:.2f} GB/device)",
+        f"  collective {t['collective_s']*1e3:12.3f} ms "
+        f"({rep.collective_bytes_per_device/1e9:.3f} GB/device: "
+        + ", ".join(f"{k}={v/1e9:.2f}GB"
+                    for k, v in rep.collective_breakdown.items()) + ")",
+        f"  dominant={t['dominant']}  roofline_fraction="
+        f"{t['roofline_fraction']:.3f}  mfu_upper_bound={t['mfu_upper_bound']:.3f}",
+        f"  model_flops={rep.model_flops/1e12:.2f}T  "
+        f"useful/HLO={t['useful_flops_ratio']:.3f}  "
+        f"mem: args={rep.argument_bytes/1e9:.2f}GB temps={rep.temp_bytes/1e9:.2f}GB",
+    ]
+    return "\n".join(lines)

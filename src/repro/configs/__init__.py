@@ -1,0 +1,3 @@
+# Architecture configs: one module per assigned arch (+ the paper's own
+# Stage-1 encoder). Each module registers a zero-arg factory in
+# repro.config.ARCHS under its canonical (underscored) id.

@@ -1,0 +1,22 @@
+# SemanticBBV — the paper's primary contribution.
+#   tokenizer.py  multi-dimensional assembly tokenization (§III-A-1)
+#   bbe.py        Stage 1: RWKV encoder + self-attention pooling (§III-A)
+#   signature.py  Stage 2: freq-weighted Set Transformer + CPI head (§III-B)
+#   losses.py     triplet / Huber-CPI / consistency objectives
+#   clustering.py jit k-means (++ init, Pallas assign kernel option)
+#   simpoint.py   intra-program SimPoint workflow (Fig 4)
+#   crossprog.py  universal clustering + cross-program estimation (Fig 5/6)
+#   pipeline.py   end-to-end public API (Fig 2)
+from repro.core.tokenizer import MultiDimTokenizer, default_tokenizer
+from repro.core.bbe import BBEConfig, bbe_init, encode_bbe, pretrain_loss, \
+    finetune_triplet_loss
+from repro.core.signature import SignatureConfig, signature_init, \
+    signature_apply, stage2_loss, predict_cpi
+from repro.core.losses import triplet_loss, huber_loss, \
+    cpi_consistency_loss, combined_stage2_loss
+from repro.core.clustering import kmeans, representatives
+from repro.core.simpoint import run_simpoint, classic_bbv_matrix, \
+    SimPointResult
+from repro.core.crossprog import universal_clustering, CrossProgramResult, \
+    speedup
+from repro.core.pipeline import SemanticBBVPipeline

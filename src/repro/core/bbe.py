@@ -1,0 +1,191 @@
+"""Stage 1: Basic Block Embedding (paper §III-A).
+
+Multi-dimensional concatenated embeddings -> RWKV backbone (scan over
+stacked blocks) -> self-attention pooling -> L2-normalized BBE.
+
+Pre-training heads (discarded before fine-tuning, §III-A-3):
+  - NTP: next-token prediction over the asm dimension.
+  - NIP: at each instruction boundary (SEP token), predict the token
+    sequence of the ENTIRE next instruction (up to `nip_horizon` tokens)
+    — the novel objective that teaches inter-instruction semantics.
+
+Fine-tuning: triplet loss over (anchor, positive, negative) blocks
+compiled at different optimization levels (§III-A-4/5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import l2_normalize, triplet_loss
+from repro.core.tokenizer import MultiDimTokenizer, default_tokenizer
+from repro.models.layers import _init_array, rmsnorm_apply, rmsnorm_init
+from repro.models.rwkv import rwkv_block_apply, rwkv_block_init
+
+
+@dataclasses.dataclass(frozen=True)
+class BBEConfig:
+    # per-dimension embedding widths; sum = d_model
+    dim_embeds: Tuple[int, ...] = (224, 32, 32, 32, 32, 32)
+    num_layers: int = 12
+    num_heads: int = 6
+    bbe_dim: int = 256          # final embedding size
+    nip_horizon: int = 8
+    max_len: int = 128
+    dtype: str = "float32"
+
+    @property
+    def d_model(self) -> int:
+        return int(sum(self.dim_embeds))
+
+
+def bbe_init(key, cfg: BBEConfig, tok: Optional[MultiDimTokenizer] = None):
+    tok = tok or default_tokenizer()
+    dtype = jnp.dtype(cfg.dtype)
+    sizes = tok.spec.dim_sizes
+    assert len(sizes) == len(cfg.dim_embeds)
+    ks = jax.random.split(key, 10)
+    params: Dict[str, Any] = {
+        "embeds": [
+            _init_array(k, (v, d), dtype, scale=0.02)
+            for k, v, d in zip(jax.random.split(ks[0], len(sizes)), sizes,
+                               cfg.dim_embeds)
+        ],
+    }
+    specs: Dict[str, Any] = {
+        "embeds": [("vocab", "embed") for _ in sizes],
+    }
+
+    def block_one(k):
+        p, _ = rwkv_block_init(k, cfg.d_model, cfg.num_heads, dtype)
+        return p
+
+    params["blocks"] = jax.vmap(block_one)(
+        jax.random.split(ks[1], cfg.num_layers))
+    _, bspec = rwkv_block_init(ks[1], cfg.d_model, cfg.num_heads, dtype)
+    specs["blocks"] = jax.tree_util.tree_map(
+        lambda s: ("layers",) + tuple(s), bspec,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))
+
+    fn, fns = rmsnorm_init(cfg.d_model, dtype)
+    params["final_norm"], specs["final_norm"] = fn, fns
+    # self-attention pooling (eq. 1-2)
+    params["pool"] = {
+        "Wa": _init_array(ks[2], (cfg.d_model, cfg.d_model), dtype),
+        "ba": jnp.zeros((cfg.d_model,), dtype),
+        "ua": _init_array(ks[3], (cfg.d_model,), dtype, scale=0.1),
+    }
+    specs["pool"] = {"Wa": ("embed", "heads"), "ba": ("heads",),
+                     "ua": ("heads",)}
+    params["out_proj"] = _init_array(ks[4], (cfg.d_model, cfg.bbe_dim), dtype)
+    specs["out_proj"] = ("embed", None)
+    # pre-training heads (separate MLPs, §III-A-3)
+    asm_vocab = sizes[0]
+    params["ntp_head"] = {
+        "w1": _init_array(ks[5], (cfg.d_model, cfg.d_model), dtype),
+        "w2": _init_array(ks[6], (cfg.d_model, asm_vocab), dtype),
+    }
+    specs["ntp_head"] = {"w1": ("embed", "ff"), "w2": ("ff", "vocab")}
+    params["nip_head"] = {
+        "w1": _init_array(ks[7], (cfg.d_model, cfg.d_model), dtype),
+        "w2": _init_array(ks[8], (cfg.d_model, cfg.nip_horizon * asm_vocab),
+                          dtype),
+    }
+    specs["nip_head"] = {"w1": ("embed", "ff"), "w2": ("ff", "vocab")}
+    return params, specs
+
+
+def backbone_apply(params, cfg: BBEConfig, tokens, impl: str = "scan"):
+    """tokens: (B, L, 6) int32 -> hidden states (B, L, d_model)."""
+    feats = [jnp.take(tbl, tokens[..., i], axis=0, mode="clip")
+             for i, tbl in enumerate(params["embeds"])]
+    x = jnp.concatenate(feats, axis=-1)
+    x = x * (cfg.d_model ** 0.5)
+
+    def body(h, block_params):
+        return rwkv_block_apply(block_params, h, cfg.num_heads, impl), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return rmsnorm_apply(params["final_norm"], x)
+
+
+def attention_pool(pool, h, valid):
+    """Self-attention pooling (paper eq. 1-2). h: (B,L,d); valid: (B,L)."""
+    e = jnp.tanh(h @ pool["Wa"].astype(h.dtype) + pool["ba"].astype(h.dtype))
+    e = e @ pool["ua"].astype(h.dtype)                       # (B, L)
+    e = jnp.where(valid, e.astype(jnp.float32), -2.0 ** 30)
+    alpha = jax.nn.softmax(e, axis=-1)
+    return jnp.einsum("bl,bld->bd", alpha.astype(h.dtype), h)
+
+
+def encode_bbe(params, cfg: BBEConfig, tokens, pad_id: int = 0,
+               impl: str = "scan"):
+    """tokens: (B, L, 6) -> L2-normalized BBE (B, bbe_dim)."""
+    valid = tokens[..., 0] != pad_id
+    h = backbone_apply(params, cfg, tokens, impl)
+    pooled = attention_pool(params["pool"], h, valid)
+    return l2_normalize(pooled @ params["out_proj"].astype(pooled.dtype))
+
+
+# ---------------------------------------------------------------------------
+# pre-training losses
+# ---------------------------------------------------------------------------
+
+
+def _mlp_head(head, h):
+    return jax.nn.gelu(h @ head["w1"].astype(h.dtype)) @ head["w2"].astype(h.dtype)
+
+
+def pretrain_loss(params, cfg: BBEConfig, tokens, sep_id: int = 3,
+                  pad_id: int = 0, impl: str = "scan"):
+    """Joint NTP + NIP loss on a (B, L, 6) token batch."""
+    B, L, _ = tokens.shape
+    h = backbone_apply(params, cfg, tokens, impl)
+    asm = tokens[..., 0]
+    valid = asm != pad_id
+
+    # --- NTP: predict asm id of token t+1 from state at t
+    logits = _mlp_head(params["ntp_head"], h[:, :-1])        # (B,L-1,V)
+    tgt = asm[:, 1:]
+    v = (valid[:, 1:] & valid[:, :-1]).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    sel = jnp.take_along_axis(logits.astype(jnp.float32), tgt[..., None],
+                              axis=-1)[..., 0]
+    ntp = jnp.sum((lse - sel) * v) / jnp.maximum(v.sum(), 1.0)
+
+    # --- NIP: at SEP tokens predict the next instruction's token sequence
+    Hm = cfg.nip_horizon
+    nip_logits = _mlp_head(params["nip_head"], h)            # (B,L,Hm*V)
+    V = nip_logits.shape[-1] // Hm
+    nip_logits = nip_logits.reshape(B, L, Hm, V).astype(jnp.float32)
+    idx = jnp.arange(L)[:, None] + 1 + jnp.arange(Hm)[None, :]  # (L,Hm)
+    idx = jnp.minimum(idx, L - 1)
+    tgt_nip = asm[:, idx]                                    # (B,L,Hm)
+    # a target is valid until the *next* SEP (instruction boundary) or pad
+    tgt_is_sep = tgt_nip == sep_id
+    beyond = jnp.cumsum(tgt_is_sep.astype(jnp.int32), axis=-1) > 0
+    at_sep = (asm == sep_id) & valid
+    vmask = (at_sep[..., None] & ~beyond
+             & (tgt_nip != pad_id)).astype(jnp.float32)
+    lse = jax.nn.logsumexp(nip_logits, axis=-1)
+    sel = jnp.take_along_axis(nip_logits, tgt_nip[..., None], axis=-1)[..., 0]
+    nip = jnp.sum((lse - sel) * vmask) / jnp.maximum(vmask.sum(), 1.0)
+
+    loss = ntp + nip
+    return loss, {"ntp": ntp, "nip": nip}
+
+
+def finetune_triplet_loss(params, cfg: BBEConfig, batch, margin: float = 0.5,
+                          impl: str = "scan"):
+    """batch: dict(anchor/positive/negative -> (B,L,6))."""
+    a = encode_bbe(params, cfg, batch["anchor"], impl=impl)
+    p = encode_bbe(params, cfg, batch["positive"], impl=impl)
+    n = encode_bbe(params, cfg, batch["negative"], impl=impl)
+    loss = triplet_loss(a, p, n, margin)
+    d_ap = jnp.mean(jnp.sum(jnp.square(a - p), -1))
+    d_an = jnp.mean(jnp.sum(jnp.square(a - n), -1))
+    return loss, {"d_ap": d_ap, "d_an": d_an}

@@ -1,0 +1,94 @@
+"""jit-compiled k-means with kmeans++ seeding.
+
+Assignment uses the Pallas `kmeans_assign` kernel when requested (TPU
+target / interpret tests); the default jnp path is numerically identical.
+Used for both intra-program SimPoint clustering and the 14-archetype
+universal clustering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _assign(x, centroids, use_kernel: bool = False):
+    if use_kernel:
+        from repro.kernels.kmeans_assign.ops import kmeans_assign
+        return kmeans_assign(x, centroids, interpret=True)
+    from repro.kernels.kmeans_assign.ref import kmeans_assign_reference
+    return kmeans_assign_reference(x, centroids)
+
+
+def kmeans_pp_init(key, x, k: int):
+    """kmeans++ seeding (jit-friendly fori_loop)."""
+    n = x.shape[0]
+    first = jax.random.randint(key, (), 0, n)
+    cents = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(i, carry):
+        cents, key = carry
+        key, sub = jax.random.split(key)
+        d2 = jnp.min(
+            jnp.sum(jnp.square(x[:, None, :] - cents[None, :, :]), -1)
+            + jnp.where(jnp.arange(cents.shape[0])[None, :] < i, 0.0, jnp.inf),
+            axis=1)
+        probs = d2 / jnp.maximum(d2.sum(), 1e-12)
+        nxt = jax.random.choice(sub, n, p=probs)
+        return cents.at[i].set(x[nxt]), key
+
+    cents, _ = jax.lax.fori_loop(1, k, body, (cents, key))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "use_kernel"))
+def kmeans_fit(key, x, k: int, iters: int = 25, use_kernel: bool = False):
+    """x: (N, d) fp32. Returns (centroids (k,d), assign (N,), inertia)."""
+    x = x.astype(jnp.float32)
+    cents = kmeans_pp_init(key, x, k)
+
+    def step(cents, _):
+        a, d2 = _assign(x, cents, use_kernel)
+        onehot = jax.nn.one_hot(a, k, dtype=jnp.float32)     # (N, k)
+        counts = onehot.sum(0)                               # (k,)
+        sums = onehot.T @ x                                  # (k, d)
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(
+            counts[:, None], 1.0), cents)
+        return new, d2.sum()
+
+    cents, inertias = jax.lax.scan(step, cents, None, length=iters)
+    a, d2 = _assign(x, cents, use_kernel)
+    return cents, a, d2.sum()
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 25, seed: int = 0,
+           restarts: int = 3, use_kernel: bool = False
+           ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Host-facing wrapper with restarts; returns best of `restarts`."""
+    best = None
+    for r in range(restarts):
+        key = jax.random.PRNGKey(seed * 1000 + r)
+        c, a, inertia = kmeans_fit(key, jnp.asarray(x), k, iters, use_kernel)
+        inertia = float(inertia)
+        if best is None or inertia < best[2]:
+            best = (np.asarray(c), np.asarray(a), inertia)
+    return best
+
+
+def representatives(x: np.ndarray, centroids: np.ndarray,
+                    assign: np.ndarray) -> np.ndarray:
+    """Index of the member closest to each centroid (SimPoint rep points).
+    Empty clusters get the globally closest point."""
+    k = centroids.shape[0]
+    reps = np.zeros(k, dtype=np.int64)
+    d2_all = ((x[:, None, :] - centroids[None, :, :]) ** 2).sum(-1)
+    for c in range(k):
+        members = np.where(assign == c)[0]
+        if len(members) == 0:
+            reps[c] = int(np.argmin(d2_all[:, c]))
+        else:
+            reps[c] = int(members[np.argmin(d2_all[members, c])])
+    return reps

@@ -1,0 +1,75 @@
+"""Cross-program estimation via universal clustering (paper §IV-C, Fig 5/6).
+
+1. Pool SemanticBBV signatures of intervals from ALL programs.
+2. K-means into `k` universal behavioral archetypes (paper: 14).
+3. Simulate ONLY the most-representative interval of each archetype.
+4. Estimate every program's CPI from its cluster-occupancy fingerprint.
+
+The speedup metric is (total instructions represented) / (instructions
+actually simulated) — the paper's 7143× for 1T instrs and 14 points.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.clustering import kmeans, representatives
+
+
+@dataclass
+class CrossProgramResult:
+    k: int
+    rep_global_idx: np.ndarray           # (k,) indices into the pooled set
+    rep_program: List[str]               # which program each rep came from
+    rep_cpi: np.ndarray                  # (k,) simulated ground truth
+    fingerprints: Dict[str, np.ndarray]  # program -> (k,) occupancy
+    est_cpi: Dict[str, float]
+    true_cpi: Dict[str, float]
+
+    def accuracy(self, program: str) -> float:
+        t, e = self.true_cpi[program], self.est_cpi[program]
+        return 1.0 - abs(e - t) / t
+
+    @property
+    def avg_accuracy(self) -> float:
+        return float(np.mean([self.accuracy(p) for p in self.true_cpi]))
+
+
+def universal_clustering(signatures: np.ndarray, program_ids: List[str],
+                         interval_cpis: np.ndarray,
+                         interval_weights: Optional[np.ndarray] = None,
+                         k: int = 14, seed: int = 0) -> CrossProgramResult:
+    """signatures: (N, d) pooled across programs; program_ids: len-N labels;
+    interval_cpis: (N,) ground truth consulted ONLY at the k reps (+ for
+    final accuracy evaluation)."""
+    n = signatures.shape[0]
+    x = signatures.astype(np.float32)
+    w = interval_weights if interval_weights is not None else np.ones(n)
+    cents, assign, _ = kmeans(x, k, seed=seed)
+    reps = representatives(x, cents, assign)
+    rep_cpi = interval_cpis[reps]                 # the only "simulation"
+    programs = sorted(set(program_ids))
+    pid_arr = np.asarray(program_ids)
+    fingerprints: Dict[str, np.ndarray] = {}
+    est: Dict[str, float] = {}
+    true: Dict[str, float] = {}
+    for p in programs:
+        sel = pid_arr == p
+        wp = w[sel] / w[sel].sum()
+        f = np.zeros(k)
+        np.add.at(f, assign[sel], wp)
+        fingerprints[p] = f
+        est[p] = float((f * rep_cpi).sum())
+        true[p] = float((wp * interval_cpis[sel]).sum())
+    res = CrossProgramResult(
+        k=k, rep_global_idx=reps,
+        rep_program=[program_ids[i] for i in reps], rep_cpi=rep_cpi,
+        fingerprints=fingerprints, est_cpi=est, true_cpi=true)
+    return res
+
+
+def speedup(n_total_intervals: int, k: int) -> float:
+    """Simulated-instruction reduction factor (interval sizes are uniform)."""
+    return n_total_intervals / k

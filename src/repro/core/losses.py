@@ -1,0 +1,55 @@
+"""Training objectives for both stages (paper §III-A-4, §III-B-3).
+
+L_total = L_triplet + w_r · L_CPI_Huber + w_c · L_consistency
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_normalize(x, eps: float = 1e-8):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def triplet_loss(anchor, positive, negative, margin: float = 0.5):
+    """Euclidean triplet loss on L2-normalized embeddings (FaceNet-style)."""
+    a, p, n = (l2_normalize(x.astype(jnp.float32))
+               for x in (anchor, positive, negative))
+    d_ap = jnp.sum(jnp.square(a - p), axis=-1)
+    d_an = jnp.sum(jnp.square(a - n), axis=-1)
+    return jnp.mean(jnp.maximum(d_ap - d_an + margin, 0.0))
+
+
+def huber_loss(pred, target, delta: float = 1.0):
+    """Robust CPI regression loss (paper uses Huber over MSE)."""
+    err = pred.astype(jnp.float32) - target.astype(jnp.float32)
+    abs_err = jnp.abs(err)
+    quad = jnp.minimum(abs_err, delta)
+    return jnp.mean(0.5 * quad ** 2 + delta * (abs_err - quad))
+
+
+def cpi_consistency_loss(signatures, cpis, tau: float = 1.0):
+    """Penalize pairs close in signature space but far in CPI (§III-B-3).
+
+    L = mean_{i≠j} exp(-||s_i - s_j||² / τ) · |log CPI_i − log CPI_j|
+    (log-CPI so a 30-vs-1 spike and 3-vs-0.1 gap count alike)."""
+    s = l2_normalize(signatures.astype(jnp.float32))
+    d2 = jnp.sum(jnp.square(s[:, None] - s[None, :]), axis=-1)
+    sim = jnp.exp(-d2 / tau)
+    dc = jnp.abs(jnp.log1p(cpis)[:, None] - jnp.log1p(cpis)[None, :])
+    n = s.shape[0]
+    mask = 1.0 - jnp.eye(n)
+    return jnp.sum(sim * dc * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def combined_stage2_loss(anchor_sig, pos_sig, neg_sig, cpi_pred, cpi_true,
+                         w_r: float = 1.0, w_c: float = 0.5,
+                         margin: float = 0.5, tau: float = 1.0):
+    """Eq. (3): weighted sum of the three Stage-2 terms. CPI regression is
+    on log1p(CPI) (perf spikes reach 30+; see perfmodel)."""
+    l_tri = triplet_loss(anchor_sig, pos_sig, neg_sig, margin)
+    l_reg = huber_loss(cpi_pred, jnp.log1p(cpi_true))
+    l_con = cpi_consistency_loss(anchor_sig, cpi_true, tau)
+    total = l_tri + w_r * l_reg + w_c * l_con
+    return total, {"triplet": l_tri, "cpi_reg": l_reg, "consistency": l_con}

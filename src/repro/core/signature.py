@@ -1,0 +1,94 @@
+"""Stage 2: order-invariant, performance-aware signature (paper §III-B).
+
+A frequency-weighted Set Transformer aggregates the BBEs of the blocks
+executed in an interval into one signature; a regression head predicts
+log1p(CPI). Trained with the triple objective in repro.core.losses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import combined_stage2_loss, l2_normalize
+from repro.models.layers import _init_array
+from repro.models.set_transformer import (
+    set_transformer_apply, set_transformer_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignatureConfig:
+    bbe_dim: int = 256
+    d_model: int = 256
+    sig_dim: int = 128
+    num_heads: int = 4
+    num_sabs: int = 2            # paper: two SABs suffice
+    num_seeds: int = 1
+    max_set: int = 64            # max distinct blocks per interval batch row
+    w_r: float = 1.0             # CPI regression weight
+    w_c: float = 0.5             # consistency weight
+    dtype: str = "float32"
+
+
+def signature_init(key, cfg: SignatureConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    st, st_specs = set_transformer_init(
+        k1, d_in=cfg.bbe_dim + 1,  # +1 log-frequency channel
+        d_model=cfg.d_model, d_out=cfg.sig_dim, num_heads=cfg.num_heads,
+        num_sabs=cfg.num_sabs, num_seeds=cfg.num_seeds, dtype=dtype)
+    params = {
+        "set_transformer": st,
+        "cpi_head": {
+            "w1": _init_array(k2, (cfg.sig_dim, cfg.d_model), dtype),
+            "b1": jnp.zeros((cfg.d_model,), dtype),
+            "w2": _init_array(k3, (cfg.d_model, 1), dtype),
+            "b2": jnp.zeros((1,), dtype),
+        },
+    }
+    specs = {
+        "set_transformer": st_specs,
+        "cpi_head": {"w1": ("embed", "ff"), "b1": ("ff",),
+                     "w2": ("ff", None), "b2": (None,)},
+    }
+    return params, specs
+
+
+def signature_apply(params, cfg: SignatureConfig, bbes, freqs, mask):
+    """bbes: (B, N, bbe_dim); freqs: (B, N) execution counts; mask: (B, N).
+
+    Returns (signature (B, sig_dim) L2-normalized, cpi_pred (B,) log1p-CPI)."""
+    sig = set_transformer_apply(params["set_transformer"], bbes,
+                                num_heads=cfg.num_heads, weights=freqs,
+                                mask=mask)
+    sig = l2_normalize(sig)
+    h = params["cpi_head"]
+    z = jnp.tanh(sig @ h["w1"].astype(sig.dtype) + h["b1"].astype(sig.dtype))
+    cpi = (z @ h["w2"].astype(sig.dtype) + h["b2"].astype(sig.dtype))[..., 0]
+    return sig, cpi
+
+
+def stage2_loss(params, cfg: SignatureConfig, batch):
+    """batch: anchor/positive/negative interval sets + anchor CPI.
+
+    Each interval set: {bbes (B,N,D), freqs (B,N), mask (B,N)}; 'cpi' (B,)."""
+    a_sig, a_cpi = signature_apply(params, cfg, batch["anchor"]["bbes"],
+                                   batch["anchor"]["freqs"],
+                                   batch["anchor"]["mask"])
+    p_sig, _ = signature_apply(params, cfg, batch["positive"]["bbes"],
+                               batch["positive"]["freqs"],
+                               batch["positive"]["mask"])
+    n_sig, _ = signature_apply(params, cfg, batch["negative"]["bbes"],
+                               batch["negative"]["freqs"],
+                               batch["negative"]["mask"])
+    return combined_stage2_loss(a_sig, p_sig, n_sig, a_cpi, batch["cpi"],
+                                w_r=cfg.w_r, w_c=cfg.w_c)
+
+
+def predict_cpi(params, cfg: SignatureConfig, bbes, freqs, mask):
+    """Inverse-transformed CPI prediction."""
+    _, logcpi = signature_apply(params, cfg, bbes, freqs, mask)
+    return jnp.expm1(logcpi)

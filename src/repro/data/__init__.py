@@ -1,0 +1,11 @@
+from repro.data.isa import (
+    Instruction,
+    BasicBlock,
+    Operand,
+    INSTR_CLASSES,
+    OPCODES,
+)
+from repro.data.asmgen import gen_function, gen_program, Function, Program, PROFILES
+from repro.data.trace import trace_program, Interval
+from repro.data.perfmodel import CPUModel, INORDER_CPU, O3_CPU, interval_cpi
+from repro.data.corpus import SyntheticBinaryCorp

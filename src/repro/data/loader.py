@@ -1,0 +1,55 @@
+"""Sharded, deterministic host data loading.
+
+Multi-host contract: each host materializes only its slice of the global
+batch (`host_slice`), and the slice is a pure function of (seed, step,
+host_id, num_hosts). Elastic rescaling re-derives slices from the same
+stream, so no data is skipped or duplicated after a restart with a
+different host count.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def host_slice(global_batch: int, host_id: Optional[int] = None,
+               num_hosts: Optional[int] = None) -> slice:
+    host_id = jax.process_index() if host_id is None else host_id
+    num_hosts = jax.process_count() if num_hosts is None else num_hosts
+    per_host = global_batch // num_hosts
+    assert per_host * num_hosts == global_batch, \
+        f"global_batch {global_batch} not divisible by {num_hosts} hosts"
+    return slice(host_id * per_host, (host_id + 1) * per_host)
+
+
+class BatchLoader:
+    """Wraps a (step -> global batch dict) function with host slicing and
+    device placement against a sharding tree."""
+
+    def __init__(self, batch_fn: Callable[[int], Dict[str, np.ndarray]],
+                 shardings=None, host_id: Optional[int] = None,
+                 num_hosts: Optional[int] = None):
+        self.batch_fn = batch_fn
+        self.shardings = shardings
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+
+    def __call__(self, step: int) -> Dict:
+        global_batch = self.batch_fn(step)
+        sl = None
+        out = {}
+        for k, v in global_batch.items():
+            if sl is None:
+                sl = host_slice(v.shape[0], self.host_id, self.num_hosts)
+            out[k] = v[sl]
+        if self.shardings is not None:
+            out = jax.device_put(out, self.shardings)
+        return out
+
+    def iterate(self, start_step: int = 0) -> Iterator[Dict]:
+        step = start_step
+        while True:
+            yield self(step)
+            step += 1

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (
+    LOGICAL_RULES,
+    logical_to_pspec,
+    make_shardings,
+    shard_params,
+    with_sharding_constraint,
+)

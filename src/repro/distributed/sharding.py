@@ -1,0 +1,159 @@
+"""Logical-axis sharding (MaxText-style).
+
+Model code annotates every parameter/activation dimension with a *logical*
+axis name; a rule table maps logical axes to physical mesh axes. Swapping
+parallelism strategies = swapping rule tables, with no model changes —
+this is what the perf hillclimb iterates on.
+
+Physical mesh axes: ("pod", "data", "model") multi-pod, ("data", "model")
+single-pod (see repro.launch.mesh).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Tuple[Optional[str], ...]
+
+# Default rule table: logical axis -> mesh axis (or tuple of mesh axes).
+# "batch" spreads over every data-parallel axis; "embed" is the FSDP axis
+# (weights' d_model dim sharded over the data axis); tensor/expert
+# parallelism lives on "model".
+LOGICAL_RULES: Dict[str, Union[str, Tuple[str, ...], None]] = {
+    "batch": ("pod", "data"),
+    "seq": None,               # sequence parallelism off by default
+    "embed": "data",           # FSDP weight shard
+    "embed_act": None,         # activations' d_model dim
+    "vocab": "model",          # LM-head / logits vocab sharding
+    "in_vocab": None,          # input embedding: replicated vocab (H2-E2)
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_seq": None,            # decode cache sequence axis
+    "ff": "model",
+    "expert": "model",
+    "expert_ff": None,
+    "layers": None,            # scan/stacked-layer axis (PP would map this)
+    "state": None,
+    "set": None,               # set-transformer element axis
+    "pool": None,
+}
+
+
+def _axes_in_mesh(mesh: Mesh) -> set:
+    return set(mesh.axis_names)
+
+
+def logical_to_pspec(logical: Logical, mesh: Mesh,
+                     rules: Optional[Dict] = None) -> P:
+    """Map a tuple of logical axis names (len == array rank) to a
+    PartitionSpec valid for `mesh` (unknown mesh axes are dropped so the
+    same rules work single- and multi-pod)."""
+    rules = rules or LOGICAL_RULES
+    avail = _axes_in_mesh(mesh)
+    used = set()
+    parts = []
+    for name in logical:
+        if name is None:
+            parts.append(None)
+            continue
+        mapped = rules.get(name, None)
+        if mapped is None:
+            parts.append(None)
+            continue
+        if isinstance(mapped, str):
+            mapped = (mapped,)
+        mapped = tuple(a for a in mapped if a in avail and a not in used)
+        used.update(mapped)
+        if not mapped:
+            parts.append(None)
+        elif len(mapped) == 1:
+            parts.append(mapped[0])
+        else:
+            parts.append(mapped)
+    return P(*parts)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def prune_pspec(pspec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes from dims they do not evenly divide (e.g. a size-1
+    batch on a 32-way data axis, or a 49155 vocab on a 16-way model axis).
+    Keeps every spec valid for every concrete shape."""
+    parts = []
+    for dim, axes in zip(shape, tuple(pspec) + (None,) * (len(shape) - len(pspec))):
+        if axes is None:
+            parts.append(None)
+            continue
+        cand = (axes,) if isinstance(axes, str) else tuple(axes)
+        kept = []
+        for a in cand:
+            size = _axis_size(mesh, a)
+            if dim % (size * _axis_size(mesh, tuple(kept))) == 0:
+                kept.append(a)
+        parts.append(None if not kept else
+                     kept[0] if len(kept) == 1 else tuple(kept))
+    return P(*parts)
+
+
+def make_shardings(logical_tree, mesh: Mesh, rules: Optional[Dict] = None,
+                   shapes=None):
+    """Pytree of logical-axis tuples -> pytree of NamedShardings.
+
+    If `shapes` (a matching pytree with .shape leaves) is given, every
+    pspec is pruned to be valid for the concrete shapes."""
+    is_spec = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        isinstance(e, (str, type(None))) for e in x)
+    if shapes is None:
+        return jax.tree_util.tree_map(
+            lambda logical: NamedSharding(
+                mesh, logical_to_pspec(logical, mesh, rules)),
+            logical_tree, is_leaf=is_spec)
+    return jax.tree_util.tree_map(
+        lambda logical, arr: NamedSharding(
+            mesh, prune_pspec(logical_to_pspec(logical, mesh, rules),
+                              arr.shape, mesh)),
+        logical_tree, shapes, is_leaf=is_spec)
+
+
+def shard_params(params, specs, mesh: Mesh, rules: Optional[Dict] = None):
+    shardings = make_shardings(specs, mesh, rules)
+    return jax.device_put(params, shardings)
+
+
+# Current logical mesh + rules, set by the launcher/trainer so model code
+# can place activation constraints without threading a mesh handle through
+# every call. None => constraints are no-ops (single-device tests).
+_ACTIVE: dict = {"mesh": None, "rules": None}
+
+
+def set_logical_mesh(mesh: Optional[Mesh], rules: Optional[Dict] = None):
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["rules"] = rules
+
+
+def get_logical_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+def with_sharding_constraint(x, logical: Logical,
+                             rules: Optional[Dict] = None):
+    """Activation sharding constraint by logical axis names; no-op unless a
+    logical mesh has been installed via `set_logical_mesh`."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    pspec = logical_to_pspec(logical, mesh, rules or _ACTIVE["rules"])
+    pspec = prune_pspec(pspec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the framework's compute hot spots:
+#   wkv             — Stage-1 RWKV delta-rule recurrence (chunked, state in VMEM)
+#   flash_attention — streaming-softmax attention for the zoo archs + SAB/PMA
+#   kmeans_assign   — tiled distance+argmin for universal clustering
+# Each package has: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper), ref.py (pure-jnp oracle used by the allclose test sweeps).

@@ -1,0 +1,16 @@
+"""jit'd wrapper: model layout (B,S,H,D)/(B,T,K,D) <-> kernel layout."""
+from __future__ import annotations
+
+from repro.kernels.flash_attention.flash import flash_pallas
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B,S,H,D); k,v: (B,T,K,D) GQA. Returns (B,S,H,D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_pallas(qt, kt, vt, causal=causal, window=window,
+                       block_q=block_q, block_k=block_k, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for (GQA, optionally causal/windowed) attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_reference(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,S,H,D); k,v: (B,T,K,D) with H % K == 0. fp32 softmax.
+
+    Returns (B,S,H,D) in q.dtype."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    qr = q.reshape(B, S, K, g, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qr, k).astype(jnp.float32) * (D ** -0.5)
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_reference

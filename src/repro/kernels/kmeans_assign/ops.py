@@ -1,0 +1,19 @@
+"""jit'd wrapper with padding to the block size."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_assign.kmeans import kmeans_assign_pallas
+
+
+def kmeans_assign(x, centroids, block_n: int = 1024,
+                  interpret: bool = False):
+    """x: (N,d); centroids: (K,d) -> (assign (N,) int32, dist2 (N,) f32)."""
+    N = x.shape[0]
+    bn = min(block_n, max(8, N))
+    pad = (-N) % bn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    a, d2 = kmeans_assign_pallas(x, centroids, block_n=bn,
+                                 interpret=interpret)
+    return a[:N], d2[:N]

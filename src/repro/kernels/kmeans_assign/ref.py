@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: nearest-centroid assignment."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_assign_reference(x, centroids):
+    """x: (N,d); centroids: (K,d). Returns (assign (N,) int32, dist2 (N,) f32)."""
+    x2 = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    c2 = jnp.sum(jnp.square(centroids.astype(jnp.float32)), axis=-1)
+    xc = x.astype(jnp.float32) @ centroids.astype(jnp.float32).T
+    d2 = x2 - 2.0 * xc + c2[None, :]
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.min(d2, axis=-1)

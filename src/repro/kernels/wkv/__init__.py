@@ -1,0 +1,2 @@
+from repro.kernels.wkv.ops import wkv_chunked
+from repro.kernels.wkv.ref import wkv_reference

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the gated delta-rule recurrence (RWKV-7 core).
+
+    S_t = (diag(w_t) S_{t-1}) + β_t k_t (v_t − (diag(w_t) S_{t-1})ᵀ k_t)ᵀ
+    y_t = S_tᵀ r_t
+
+State layout S: (k_dim, v_dim). All math in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_reference(r, k, v, w, beta, state: Optional[jnp.ndarray] = None):
+    """r,k,v,w: (B,S,H,dh); beta: (B,S,H).
+
+    Returns (y (B,S,H,dh) fp32, final_state (B,H,dh,dh) fp32)."""
+    B, S, H, dh = r.shape
+
+    def step(Sm, xs):
+        rt, kt, vt, wt, bt = xs
+        Sm = Sm * wt[..., :, None]
+        Sk = jnp.einsum("bhkv,bhk->bhv", Sm, kt)
+        delta = vt - Sk
+        Sm = Sm + bt[..., None, None] * (kt[..., :, None] * delta[..., None, :])
+        y = jnp.einsum("bhkv,bhk->bhv", Sm, rt)
+        return Sm, y
+
+    S0 = state if state is not None else jnp.zeros((B, H, dh, dh), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for a in (r, k, v, w)) + (beta.transpose(1, 0, 2).astype(jnp.float32),)
+    Sf, ys = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), Sf

@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines — jax locks the device count on first init.
+
+DOC = """Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell:
+  1. build the step function (train update / prefill forward / serve_step)
+  2. resolve logical-axis shardings against the production mesh
+  3. jax.jit(...).lower(**ShapeDtypeStructs).compile()   — no allocation
+  4. print memory_analysis() (fits in 16 GB/chip?) and cost_analysis()
+  5. run the trip-count-corrected HLO analyzer and emit the roofline
+     report consumed by EXPERIMENTS.md §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    SHAPES, TrainConfig, get_arch, list_archs,
+)
+from repro.distributed.sharding import (
+    LOGICAL_RULES, make_shardings, set_logical_mesh,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.train.optimizer import global_norm_clip, lr_schedule, make_optimizer
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+# Assigned architectures (the 40-cell matrix) — semanticbbv_encoder is an
+# extra, not part of the assignment.
+ASSIGNED = [
+    "whisper_tiny", "grok_1_314b", "qwen3_moe_235b_a22b", "qwen3_4b",
+    "qwen2_7b", "granite_3_2b", "smollm_135m", "xlstm_1_3b",
+    "paligemma_3b", "jamba_1_5_large_398b",
+]
+
+
+def policy_for(model) -> Dict[str, Any]:
+    """Per-size runtime policy: optimizer + remat + attention impl.
+
+    remat is ALWAYS "full" (nothing saveable): the dots-saveable policy
+    reaches inside the flash-attention custom_vjp when the layer body is
+    re-linearized and stacks every kv-chunk's score matrix across the
+    layer scan — i.e. the full (S,T) attention matrix × num_layers in
+    fp32 (measured: 290 GB/device on smollm train_4k). Recomputing the
+    block forward costs ~33% extra FLOPs and saves ~3 orders of magnitude
+    of HBM.
+
+    microbatch: the layer scan saves its carry (the residual stream) per
+    layer for backward — batch 1M tokens × d_model × 64+ layers does not
+    fit 16 GB/chip for the 300B+ configs, so their train step accumulates
+    gradients over `microbatch` sequential slices."""
+    n = model.param_count()
+    if n >= 5e10:
+        # mb8 measured best: mb16 doubles FSDP gather volume for ~1GB of
+        # residual-stack savings; mb32 quadruples it and still misses the
+        # 16GB fit (temps floor = optimizer/MoE transients) — §Perf H2
+        return dict(optimizer="adafactor", remat="full", impl="chunked",
+                    microbatch=8)
+    if n >= 1e9:  # 2.5-7.6B: residual stacks at 1M tokens need accumulation
+        return dict(optimizer="adamw", remat="full", impl="chunked",
+                    microbatch=4)
+    return dict(optimizer="adamw", remat="full", impl="chunked",
+                microbatch=1)
+
+
+def rules_for(shape_name: str, cfg=None) -> Dict[str, Any]:
+    rules = dict(LOGICAL_RULES)
+    if SHAPES[shape_name].kind == "decode":
+        # GQA head counts (1..8) never divide the 16-way model axis, so the
+        # decode cache shards its sequence dim instead
+        rules["kv_seq"] = "model"
+    if shape_name == "long_500k":
+        # batch=1: spend the idle data axis on the sequence dim too
+        rules["kv_seq"] = ("data", "model")
+    if cfg is not None and cfg.sharding_overrides:
+        rules.update(dict(cfg.sharding_overrides))
+    return rules
+
+
+def batch_specs(model, shape) -> Dict[str, tuple]:
+    """Logical axes for every input leaf."""
+    specs = {}
+    for k in model.input_specs(shape):
+        if k == "tokens":
+            specs[k] = ("batch", "seq") if shape.kind != "decode" \
+                else ("batch", None)
+        elif k in ("frames", "patches"):
+            specs[k] = ("batch", None, "embed_act")
+        elif k == "pos":
+            specs[k] = ()
+        elif k == "cache":
+            specs[k] = model.cache_specs(shape)
+    return specs
+
+
+def make_train_step(model, policy, train_cfg: TrainConfig,
+                    param_specs=None):
+    opt_init, opt_update, opt_specs_fn = make_optimizer(policy["optimizer"])
+    mb = int(policy.get("microbatch", 1))
+
+    def constrain_grads(grads):
+        """Pin gradients to the parameter layout so XLA lowers the DP
+        reduction as reduce-scatter into the FSDP shards instead of
+        all-reducing full-size gradients."""
+        if param_specs is None:
+            return grads
+        from repro.distributed.sharding import with_sharding_constraint
+        is_spec = lambda t: isinstance(t, tuple) and all(  # noqa: E731
+            isinstance(e, (str, type(None))) for e in t)
+        return jax.tree_util.tree_map(
+            lambda g, s: with_sharding_constraint(g, tuple(s)),
+            grads, param_specs, is_leaf=lambda x: is_spec(x) if isinstance(
+                x, tuple) else False)
+
+    def one_grads(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, impl=policy["impl"],
+                              remat=policy["remat"])
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, step):
+        if mb > 1:
+            split = lambda x: x.reshape(  # noqa: E731
+                (mb, x.shape[0] // mb) + x.shape[1:])
+            batches = jax.tree_util.tree_map(split, batch)
+
+            def acc(carry, mbatch):
+                tot_l, tot_m, tot_g = carry
+                loss, metrics, grads = one_grads(params, mbatch)
+                grads = constrain_grads(grads)
+                tot_g = jax.tree_util.tree_map(jnp.add, tot_g, grads)
+                tot_m = jax.tree_util.tree_map(jnp.add, tot_m, metrics)
+                return (tot_l + loss, tot_m, tot_g), None
+
+            mb0 = jax.tree_util.tree_map(lambda x: x[0], batches)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+            g0 = constrain_grads(g0)
+            m0 = jax.tree_util.tree_map(
+                lambda _: jnp.zeros((), jnp.float32),
+                jax.eval_shape(lambda: one_grads(params, mb0)[1]))
+            (loss, metrics, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), m0, g0), batches)
+            loss = loss / mb
+            metrics = jax.tree_util.tree_map(lambda x: x / mb, metrics)
+            grads = jax.tree_util.tree_map(lambda x: x / mb, grads)
+        else:
+            loss, metrics, grads = one_grads(params, batch)
+            grads = constrain_grads(grads)
+        grads, gnorm = global_norm_clip(grads, train_cfg.grad_clip)
+        lr = lr_schedule(step, base_lr=train_cfg.learning_rate,
+                         warmup_steps=train_cfg.warmup_steps,
+                         total_steps=train_cfg.total_steps)
+        params, opt_state = opt_update(grads, opt_state, params, lr=lr,
+                                       weight_decay=train_cfg.weight_decay)
+        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+
+    return train_step, opt_init, opt_specs_fn
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               rules_override: Optional[Dict] = None,
+               policy_override: Optional[Dict] = None):
+    """Lower + compile one (arch, shape, mesh) cell; returns artifacts."""
+    cfg = get_arch(arch_id)
+    model = build_model(cfg)
+    shape = SHAPES[shape_name]
+    if not model.supports_shape(shape):
+        return {"status": "SKIP(full-attn)", "arch": arch_id,
+                "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(shape_name, cfg)
+    if rules_override:
+        rules.update(rules_override)
+    policy = policy_for(model)
+    if policy_override:
+        policy.update(policy_override)
+    set_logical_mesh(mesh, rules)
+    try:
+        param_specs = model.param_specs()
+        params_shapes = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0))[0])
+        inputs = model.input_specs(shape)
+        in_logical = batch_specs(model, shape)
+        with mesh:
+            pshard = make_shardings(param_specs, mesh, rules,
+                                    shapes=params_shapes)
+            in_shard = make_shardings(in_logical, mesh, rules, shapes=inputs)
+            if shape.kind == "train":
+                tc = TrainConfig(optimizer=policy["optimizer"])
+                step_fn, opt_init, opt_specs_fn = make_train_step(
+                    model, policy, tc, param_specs=param_specs)
+                opt_shapes = jax.eval_shape(opt_init, params_shapes)
+                oshard = make_shardings(opt_specs_fn(param_specs), mesh,
+                                        rules, shapes=opt_shapes)
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(pshard, oshard, in_shard, None),
+                    out_shardings=(pshard, oshard, None),
+                    donate_argnums=(0, 1),
+                ).lower(params_shapes, opt_shapes, inputs,
+                        jax.ShapeDtypeStruct((), jnp.int32))
+            elif shape.kind == "prefill":
+                def prefill(params, batch):
+                    return model.prefill(params, batch, impl=policy["impl"])
+
+                lowered = jax.jit(
+                    prefill, in_shardings=(pshard, in_shard),
+                ).lower(params_shapes, inputs)
+            else:  # decode
+                def serve_step(params, cache, tokens, pos):
+                    return model.decode_step(params, cache, tokens, pos)
+
+                lowered = jax.jit(
+                    serve_step,
+                    in_shardings=(pshard, in_shard["cache"],
+                                  in_shard["tokens"], None),
+                    out_shardings=(None, in_shard["cache"]),
+                    donate_argnums=(1,),
+                ).lower(params_shapes, inputs["cache"], inputs["tokens"],
+                        inputs["pos"])
+            t0 = time.monotonic()
+            compiled = lowered.compile()
+            compile_s = time.monotonic() - t0
+        mem = None
+        try:
+            mem = compiled.memory_analysis()
+        except Exception:
+            pass
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+        except Exception:
+            ca = {}
+        return {
+            "status": "OK", "arch": arch_id, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": mesh.devices.size, "policy": policy,
+            "compile_s": compile_s, "compiled": compiled,
+            "memory_analysis": mem, "cost_analysis": ca, "model": model,
+        }
+    finally:
+        set_logical_mesh(None)
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             save: bool = True, keep_hlo: bool = False) -> Dict[str, Any]:
+    from repro.analysis.hlo_parse import analyze_hlo
+    from repro.analysis.roofline import format_report, roofline_terms
+
+    name = f"{arch_id}_{shape_name}_{'2x16x16' if multi_pod else '16x16'}"
+    try:
+        art = lower_cell(arch_id, shape_name, multi_pod)
+    except Exception as e:
+        traceback.print_exc()
+        return {"status": f"FAIL: {type(e).__name__}: {e}", "arch": arch_id,
+                "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16", "name": name}
+    if art["status"].startswith("SKIP"):
+        print(f"{name}: {art['status']}")
+        art["name"] = name
+        if save:
+            _save_json(name, art)
+        return art
+    compiled = art.pop("compiled")
+    model = art.pop("model")
+    shape = SHAPES[shape_name]
+    hlo_text = compiled.as_text()
+    stats = analyze_hlo(hlo_text)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_active = model.active_param_count()
+    flops_per_token = 6 * n_active if shape.kind == "train" else 2 * n_active
+    rep = roofline_terms(
+        stats, arch=arch_id, shape=shape_name, mesh=art["mesh"],
+        chips=art["chips"], model_flops=float(flops_per_token) * tokens,
+        memory_analysis=art.pop("memory_analysis"),
+        cost_analysis=art.pop("cost_analysis"))
+    print(format_report(rep))
+    mem_per_chip = rep.argument_bytes + rep.temp_bytes
+    print(f"  compile={art['compile_s']:.1f}s  "
+          f"per-chip bytes={(mem_per_chip)/1e9:.2f}GB "
+          f"({'FITS' if mem_per_chip < 16e9 else 'OVER'} 16GB)")
+    art["roofline"] = rep.to_json()
+    art["collective_counts"] = dict(stats.collective_counts)
+    art["name"] = name
+    if keep_hlo:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        with open(os.path.join(ARTIFACT_DIR, name + ".hlo.txt"), "w") as f:
+            f.write(hlo_text)
+    if save:
+        _save_json(name, art)
+    return art
+
+
+def _save_json(name: str, art: Dict[str, Any]):
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    clean = {k: v for k, v in art.items()
+             if isinstance(v, (str, int, float, dict, list, type(None)))}
+    with open(os.path.join(ARTIFACT_DIR, name + ".json"), "w") as f:
+        json.dump(clean, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="full 40-cell matrix (+ multi-pod per --multi-pod)")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch.replace("-", "_")]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                results.append(run_cell(arch, shape, mp,
+                                        keep_hlo=args.keep_hlo))
+    ok = sum(1 for r in results if r["status"] == "OK")
+    skip = sum(1 for r in results if r["status"].startswith("SKIP"))
+    fail = [r for r in results if r["status"].startswith("FAIL")]
+    print(f"\n=== dry-run: {ok} OK, {skip} SKIP, {len(fail)} FAIL "
+          f"of {len(results)} cells ===")
+    for r in fail:
+        print("  FAIL:", r["name"], r["status"])
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

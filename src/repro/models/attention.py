@@ -1,0 +1,276 @@
+"""GQA attention: init + apply for train/prefill/decode.
+
+Implementations (selected by `impl`):
+  - "ref":     materializes full (q_len, kv_len) scores — oracle/small use.
+  - "chunked": lax.scan over KV chunks with streaming softmax — O(seq)
+               memory, HLO-equivalent stand-in for the Pallas flash kernel
+               on backends where Pallas cannot lower (CPU dry-run).
+  - "pallas":  repro.kernels.flash_attention (TPU target).
+
+Mask modes: "causal", "full", "prefix" (bidirectional over a prefix,
+causal after — PaliGemma-style), plus optional sliding `window`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import with_sharding_constraint
+from repro.models.layers import _init_array, rope
+
+NEG_INF = -2.0 ** 30
+
+
+def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, dtype, qkv_bias: bool = False,
+              qk_norm: bool = False):
+    keys = jax.random.split(key, 4)
+    params = {
+        "wq": _init_array(keys[0], (d_model, num_heads * head_dim), dtype),
+        "wk": _init_array(keys[1], (d_model, num_kv_heads * head_dim), dtype),
+        "wv": _init_array(keys[2], (d_model, num_kv_heads * head_dim), dtype),
+        "wo": _init_array(keys[3], (num_heads * head_dim, d_model), dtype),
+    }
+    specs = {
+        "wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"), "wo": ("heads", "embed"),
+    }
+    if qkv_bias:
+        params.update(bq=jnp.zeros((num_heads * head_dim,), dtype),
+                      bk=jnp.zeros((num_kv_heads * head_dim,), dtype),
+                      bv=jnp.zeros((num_kv_heads * head_dim,), dtype))
+        specs.update(bq=("heads",), bk=("kv_heads",), bv=("kv_heads",))
+    if qk_norm:
+        params.update(q_norm=jnp.ones((head_dim,), dtype),
+                      k_norm=jnp.ones((head_dim,), dtype))
+        specs.update(q_norm=(None,), k_norm=(None,))
+    return params, specs
+
+
+def _rms(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_qkv(params, x, kv_x, num_heads, num_kv_heads, head_dim,
+                 positions, kv_positions, qk_norm, rope_theta, use_rope):
+    B, S = x.shape[:2]
+    Skv = kv_x.shape[1]
+    q = x @ params["wq"].astype(x.dtype)
+    k = kv_x @ params["wk"].astype(x.dtype)
+    v = kv_x @ params["wv"].astype(x.dtype)
+    if "bq" in params:
+        q, k, v = (q + params["bq"].astype(q.dtype),
+                   k + params["bk"].astype(k.dtype),
+                   v + params["bv"].astype(v.dtype))
+    q = q.reshape(B, S, num_heads, head_dim)
+    k = k.reshape(B, Skv, num_kv_heads, head_dim)
+    v = v.reshape(B, Skv, num_kv_heads, head_dim)
+    if qk_norm:
+        q = _rms(q, params["q_norm"])
+        k = _rms(k, params["k_norm"])
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, kv_positions, rope_theta)
+    return q, k, v
+
+
+def _mask_bias(mask_mode: str, q_pos, kv_pos, window: int, prefix_len: int):
+    """(q_len, kv_len) additive bias from positions."""
+    if mask_mode == "full":
+        m = jnp.ones((q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    else:
+        causal = q_pos[:, None] >= kv_pos[None, :]
+        if mask_mode == "prefix":
+            in_prefix = kv_pos[None, :] < prefix_len
+            m = causal | in_prefix
+        else:
+            m = causal
+    if window > 0:
+        m = m & (q_pos[:, None] - kv_pos[None, :] < window)
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def _ref_attention(q, k, v, bias, kv_valid=None):
+    """q:(B,S,H,D) k,v:(B,T,K,D) bias:(S,T) -> (B,S,H,D). fp32 softmax."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    qr = q.reshape(B, S, K, g, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qr, k).astype(jnp.float32)
+    scores = scores * (D ** -0.5) + bias
+    if kv_valid is not None:  # (B, T) padding mask
+        scores = scores + jnp.where(kv_valid, 0.0, NEG_INF)[:, None, None, None, :]
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, D)
+
+
+def _chunk_kv(k, v, bias, chunk):
+    B, T, K, D = k.shape
+    S = bias.shape[0]
+    n_chunks = -(-T // chunk)
+    pad = n_chunks * chunk - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    kc = k.reshape(B, n_chunks, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    bc = bias.reshape(S, n_chunks, chunk).transpose(1, 0, 2)
+    return kc, vc, bc, pad
+
+
+def _chunked_fwd(q, k, v, bias, chunk):
+    """Streaming softmax over kv chunks. Returns (out, m, l) fp32 stats."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    g = H // K
+    kc, vc, bc, _ = _chunk_kv(k, v, bias, chunk)
+    qr = q.reshape(B, S, K, g, D)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, bj = xs
+        s = jnp.einsum("bskgd,btkd->bkgst", qr, kj).astype(jnp.float32)
+        s = s * (D ** -0.5) + bj[None, None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, g, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, g, S), jnp.float32)
+    acc0 = jnp.zeros((B, K, g, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kc, vc, bc))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    return out, m, l_safe
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _chunked_attention(q, k, v, bias, chunk: int = 512):
+    """Flash-equivalent attention: O(S·D) memory in BOTH directions.
+
+    The naive scan-of-chunks forward is flash-like, but plain autodiff of
+    it stacks every chunk's score matrix as a scan residual — i.e. the
+    full (S,T) attention matrix in fp32 — which is exactly what flash
+    exists to avoid. This custom_vjp implements the flash backward:
+    recompute p per chunk from the saved (m, l) stats, no stacking.
+    """
+    out, m, l = _chunked_fwd(q, k, v, bias, chunk)
+    B, S, H, D = q.shape
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D).astype(q.dtype)
+
+
+def _chunked_attention_fwd(q, k, v, bias, chunk):
+    out, m, l = _chunked_fwd(q, k, v, bias, chunk)
+    B, S, H, D = q.shape
+    o = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D).astype(q.dtype)
+    return o, (q, k, v, bias, out, m, l)
+
+
+def _chunked_attention_bwd(chunk, res, do):
+    q, k, v, bias, out, m, l = res
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    scale = D ** -0.5
+    qr = q.reshape(B, S, K, g, D).astype(jnp.float32)
+    kc, vc, bc, pad = _chunk_kv(k, v, bias, chunk)
+    doc = do.reshape(B, S, K, g, D).astype(jnp.float32)
+    doc = doc.transpose(0, 2, 3, 1, 4)                       # (B,K,g,S,D)
+    # delta = rowsum(dO * O)
+    delta = jnp.sum(doc * out, axis=-1)                      # (B,K,g,S)
+
+    def step(dq_acc, xs):
+        kj, vj, bj = xs                                      # (B,c,K,D),(S,c)
+        s = jnp.einsum("bskgd,btkd->bkgst", qr, kj) * scale \
+            + bj[None, None, None]
+        p = jnp.exp(s - m[..., None]) / l[..., None]         # (B,K,g,S,c)
+        dv_j = jnp.einsum("bkgst,bkgsd->btkd", p, doc)
+        dp = jnp.einsum("bkgsd,btkd->bkgst", doc, vj.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bkgst,btkd->bskgd", ds, kj)
+        dk_j = jnp.einsum("bkgst,bskgd->btkd", ds, qr)
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, S, K, g, D), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kc, vc, bc))
+    nT = kc.shape[0] * kc.shape[2]
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, nT, K, D)
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, nT, K, D)
+    if pad:
+        dk = dk[:, :T]
+        dv = dv[:, :T]
+    return (dq.reshape(B, S, H, D).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype), jnp.zeros_like(bias))
+
+
+_chunked_attention.defvjp(_chunked_attention_fwd, _chunked_attention_bwd)
+
+
+def attn_apply(params, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
+               positions=None, kv_x=None, kv_positions=None,
+               mask_mode: str = "causal", window: int = 0,
+               prefix_len: int = 0, rope_theta: float = 10000.0,
+               use_rope: bool = True, qk_norm: bool = False,
+               impl: str = "chunked", kv_valid=None):
+    """Self/cross attention over full sequences (train/prefill)."""
+    B, S = x.shape[:2]
+    kv_x = x if kv_x is None else kv_x
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if kv_positions is None:
+        kv_positions = jnp.arange(kv_x.shape[1])[None, :] if kv_x is not x else positions
+    q, k, v = _project_qkv(params, x, kv_x, num_heads, num_kv_heads, head_dim,
+                           positions, kv_positions, qk_norm, rope_theta,
+                           use_rope)
+    q = with_sharding_constraint(q, ("batch", None, "heads", None))
+    bias = _mask_bias(mask_mode, positions[0], kv_positions[0], window, prefix_len)
+    if impl == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=(mask_mode == "causal"),
+                              window=window)
+    elif impl == "chunked":
+        out = _chunked_attention(q, k, v, bias)
+    else:
+        out = _ref_attention(q, k, v, bias, kv_valid)
+    out = out.reshape(B, S, num_heads * head_dim)
+    return out @ params["wo"].astype(out.dtype)
+
+
+# ----------------------------------------------------------------------------
+# decode (single step against a KV cache)
+# ----------------------------------------------------------------------------
+
+def attn_decode(params, x, cache_k, cache_v, pos, *, num_heads: int,
+                num_kv_heads: int, head_dim: int,
+                rope_theta: float = 10000.0, use_rope: bool = True,
+                qk_norm: bool = False, window: int = 0):
+    """x: (B, 1, d); cache_k/v: (B, T, K, D); pos: scalar current position.
+
+    Returns (out (B,1,d), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    positions = jnp.full((B, 1), pos)
+    q, k, v = _project_qkv(params, x, x, num_heads, num_kv_heads, head_dim,
+                           positions, positions, qk_norm, rope_theta, use_rope)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    kv_pos = jnp.arange(T)
+    valid = kv_pos <= pos
+    if window > 0:
+        valid = valid & (pos - kv_pos < window)
+    bias = jnp.where(valid, 0.0, NEG_INF)[None, :]  # (1, T)
+    out = _ref_attention(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), bias)
+    out = out.reshape(B, 1, num_heads * head_dim)
+    return out @ params["wo"].astype(out.dtype), cache_k, cache_v

@@ -1,0 +1,151 @@
+"""Core layers: pure-functional, params are nested dicts of jnp arrays.
+
+Every init function returns (params, specs) where `specs` mirrors the
+params pytree with tuples of logical axis names (see
+repro.distributed.sharding). Convention: weight matrices are stored
+(in_dim, out_dim) and applied as x @ W.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Initializer = str  # "normal" | "zeros" | "ones"
+
+
+def _init_array(key, shape, dtype, scale: Optional[float] = None):
+    if scale is None:  # fan-in scaled normal
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+        scale = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# dense
+# ----------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               in_axis: str = "embed", out_axis: str = "ff",
+               scale: Optional[float] = None):
+    keys = jax.random.split(key, 2)
+    params = {"w": _init_array(keys[0], (d_in, d_out), dtype, scale)}
+    specs = {"w": (in_axis, out_axis)}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+        specs["b"] = (out_axis,)
+    return params, specs
+
+
+def dense_apply(params, x, compute_dtype=None):
+    w = params["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype, axis: str = "embed_act"):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": (axis,)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(d: int, dtype, axis: str = "embed_act"):
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": (axis,), "bias": (axis,)})
+
+
+def layernorm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# embeddings
+# ----------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype):
+    params = {"table": _init_array(key, (vocab, d), dtype, scale=0.02)}
+    return params, {"table": ("vocab", "embed")}
+
+
+def embed_apply(params, ids):
+    return jnp.take(params["table"], ids, axis=0, mode="clip")
+
+
+def unembed_apply(params, x):
+    """Logits projection (tied or untied table of shape (vocab, d))."""
+    return x @ params["table"].astype(x.dtype).T
+
+
+# ----------------------------------------------------------------------------
+# rotary position embedding
+# ----------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim), positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ----------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, gated: bool = True):
+    keys = jax.random.split(key, 3)
+    if gated:
+        params = {
+            "wi": _init_array(keys[0], (d_model, d_ff), dtype),
+            "wg": _init_array(keys[1], (d_model, d_ff), dtype),
+            "wo": _init_array(keys[2], (d_ff, d_model), dtype),
+        }
+        specs = {"wi": ("embed", "ff"), "wg": ("embed", "ff"),
+                 "wo": ("ff", "embed")}
+    else:
+        params = {
+            "wi": _init_array(keys[0], (d_model, d_ff), dtype),
+            "wo": _init_array(keys[2], (d_ff, d_model), dtype),
+            "bi": jnp.zeros((d_ff,), dtype),
+            "bo": jnp.zeros((d_model,), dtype),
+        }
+        specs = {"wi": ("embed", "ff"), "wo": ("ff", "embed"),
+                 "bi": ("ff",), "bo": ("embed",)}
+    return params, specs
+
+
+def mlp_apply(params, x, gated: bool = True):
+    if gated:
+        h = jax.nn.silu(x @ params["wg"].astype(x.dtype)) * (x @ params["wi"].astype(x.dtype))
+        return h @ params["wo"].astype(x.dtype)
+    h = jax.nn.gelu(x @ params["wi"].astype(x.dtype) + params["bi"].astype(x.dtype))
+    return h @ params["wo"].astype(x.dtype) + params["bo"].astype(x.dtype)

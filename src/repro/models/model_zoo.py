@@ -1,0 +1,152 @@
+"""Public model API: build a `Model` from a ModelConfig.
+
+A Model bundles init / loss / decode plus the ShapeDtypeStruct
+`input_specs` for every assigned workload shape — the dry-run, trainer,
+and server all consume this one object.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -------------------------------------------------------------- params
+    def init(self, rng) -> Tuple[Any, Any]:
+        """-> (params, logical-axis specs)"""
+        return tfm.lm_init(rng, self.cfg)
+
+    def param_specs(self):
+        box = {}
+
+        def f():  # specs are plain python; stash them during abstract trace
+            p, s = tfm.lm_init(jax.random.PRNGKey(0), self.cfg)
+            box["s"] = s
+            return p
+
+        jax.eval_shape(f)
+        return box["s"]
+
+    # --------------------------------------------------------------- train
+    def loss(self, params, batch, impl: str = "chunked",
+             remat: str = "none", label_smoothing: float = 0.0):
+        return tfm.lm_loss(params, self.cfg, batch, impl=impl, remat=remat,
+                           label_smoothing=label_smoothing)
+
+    # --------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                   enc_len=None):
+        return tfm.init_cache(self.cfg, batch, max_seq, dtype,
+                              enc_len=enc_len)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return tfm.lm_decode_step(params, self.cfg, cache, tokens, pos)
+
+    def prefill(self, params, batch, impl: str = "chunked"):
+        """Full-sequence forward returning logits (prefill benchmark path)."""
+        enc_memory = None
+        if self.cfg.encoder_layers:
+            enc_memory = tfm.encoder_apply(params, self.cfg, batch["frames"],
+                                           impl)
+        return tfm.lm_apply(params, self.cfg, batch["tokens"], impl=impl,
+                            prefix_embeds=batch.get("patches"),
+                            enc_memory=enc_memory, return_hidden=True)
+
+    # --------------------------------------------------------------- shapes
+    def supports_shape(self, shape: ShapeConfig) -> bool:
+        if shape.name == "long_500k":
+            # needs sub-quadratic sequence mixing (DESIGN.md §4)
+            kinds = set(self.cfg.blocks())
+            recurrent = {"mamba", "mlstm", "slstm"}
+            n_attn = sum(1 for k in self.cfg.blocks() if k == "attn")
+            if kinds <= recurrent:
+                return True
+            # hybrids qualify if attention is sparse in the stack AND windowed
+            if kinds & recurrent and (self.cfg.attn_window > 0
+                                      or n_attn * 8 <= self.cfg.num_layers):
+                return True
+            return False
+        return True
+
+    def input_specs(self, shape: ShapeConfig, *, per_device_batch: int = 0
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of a workload.
+
+        For train/prefill: the token batch (+ modality stubs).
+        For decode: one new token per sequence + the KV/state cache at
+        seq_len occupancy (the cache is an explicit input of serve_step).
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            specs: Dict[str, Any] = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.encoder_layers:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, min(S, 1500), cfg.d_model), jnp.bfloat16)
+            if cfg.frontend == "vision_patches":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_prefix_embeddings, cfg.d_model), jnp.bfloat16)
+            return specs
+        # decode: cache filled to S
+        box = {}
+
+        def f():
+            c, s = self.init_cache(B, S, dtype=jnp.bfloat16)
+            box["s"] = s
+            return c
+
+        cache = jax.eval_shape(f)
+        cache = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    def cache_specs(self, shape: ShapeConfig):
+        box = {}
+
+        def f():
+            c, s = self.init_cache(shape.global_batch, shape.seq_len)
+            box["s"] = s
+            return c
+
+        jax.eval_shape(f)
+        return box["s"]
+
+    # ------------------------------------------------------------ analytics
+    def param_count(self) -> int:
+        from repro.utils.tree import tree_param_count
+        shapes = jax.eval_shape(lambda: tfm.lm_init(
+            jax.random.PRNGKey(0), self.cfg)[0])
+        return tree_param_count(shapes)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of num_experts)."""
+        total = self.param_count()
+        if self.cfg.moe is None:
+            return total
+        # subtract inactive expert weights
+        moe = self.cfg.moe
+        n_moe_layers = sum(1 for i in range(self.cfg.num_layers)
+                           if self.cfg.is_moe_layer(i))
+        per_expert = self.cfg.d_model * moe.d_ff * (3 if self.cfg.mlp_gated
+                                                    else 2)
+        inactive = n_moe_layers * (moe.num_experts - moe.top_k) * per_expert
+        return total - inactive
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,480 @@
+"""Recurrent sequence mixers: Mamba (Jamba) and xLSTM (mLSTM + sLSTM).
+
+All three expose the same triple of entry points used by the LM assembly:
+  *_init(key, cfg-ish dims, dtype)           -> (params, specs)
+  *_apply(params, x, ...)                    -> y          (train/prefill)
+  *_decode(params, x, state, ...)            -> (y, state) (single step)
+
+Sequence scans run in (chunk-parallel where the math allows) lax.scan so
+the HLO stays compact for the 512-device dry-run; decode is an O(1) state
+update, which is what makes the `long_500k` shape tractable for the
+ssm/hybrid families (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init_array
+
+# ============================================================================
+# Mamba (selective SSM, mamba-1 style)
+# ============================================================================
+
+
+def mamba_dims(d_model: int, d_state: int):
+    d_inner = 2 * d_model
+    dt_rank = max(1, d_model // 16)
+    return d_inner, dt_rank
+
+
+def mamba_init(key, d_model: int, d_state: int, conv_dim: int, dtype):
+    d_inner, dt_rank = mamba_dims(d_model, d_state)
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_proj": _init_array(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": _init_array(ks[1], (conv_dim, d_inner), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": _init_array(ks[2], (d_inner, dt_rank + 2 * d_state), dtype),
+        "dt_proj": _init_array(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": jnp.full((d_inner,), math.log(math.e - 1), dtype),  # softplus^-1(1)
+        # S4D-real init for A
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                  (d_inner, 1))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": _init_array(ks[5], (d_inner, d_model), dtype),
+    }
+    specs = {
+        "in_proj": ("embed", "ff"), "conv_w": (None, "ff"), "conv_b": ("ff",),
+        "x_proj": ("ff", None), "dt_proj": (None, "ff"), "dt_bias": ("ff",),
+        "A_log": ("ff", None), "D": ("ff",), "out_proj": ("ff", "embed"),
+    }
+    return params, specs
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B,S,C), w: (K,C) depthwise. state: (B,K-1,C) trailing context."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b, xp[:, -(K - 1):, :]
+
+
+def _selective_scan_fused(dt, xi, Bc, Cc, A, chunk: int = 256):
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t · h_t
+
+    dt, xi: (B,S,DI) fp32; Bc, Cc: (B,S,DS) fp32; A: (DI,DS).
+
+    PERF NOTE (EXPERIMENTS.md §Perf, jamba H3): the obvious formulation
+    materializes dA/dBx as full (B,S,DI,DS) fp32 tensors — 5 such tensors
+    × 63 layers dominated jamba-train's HBM traffic. Here the (DI,DS)
+    expansion happens per CHUNK inside the scan, so only (B,chunk,DI,DS)
+    transients ever exist and the full-sequence tensors are never built.
+    """
+    B, S, DI = dt.shape
+    DS = Bc.shape[-1]
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S, f"seq {S} not divisible by chunk {chunk}"
+    fold = lambda t: t.reshape((B, nc, chunk) + t.shape[2:]).transpose(  # noqa: E731
+        1, 0, 2, *range(3, t.ndim + 1))
+    dt_c, xi_c, B_c, C_c = fold(dt), fold(xi), fold(Bc), fold(Cc)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, xs):
+        dtj, xij, bj, cj = xs                        # (B,c,DI) / (B,c,DS)
+        da = jnp.exp(dtj[..., None] * A)             # (B,c,DI,DS) transient
+        dbx = (dtj * xij)[..., None] * bj[..., None, :]
+        aa, hh = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        hh = hh + aa * h[:, None]
+        y = jnp.einsum("bcds,bcs->bcd", hh, cj)
+        return hh[:, -1], y
+
+    h0 = jnp.zeros((B, DI, DS), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (dt_c, xi_c, B_c, C_c))
+    return ys.transpose(1, 0, 2, 3).reshape(B, S, DI)
+
+
+def mamba_apply(params, x, d_state: int, chunk: int = 4096):
+    """x: (B,S,d) -> (B,S,d)"""
+    B, S, d = x.shape
+    d_inner, dt_rank = mamba_dims(d, d_state)
+    xz = x @ params["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, _ = _causal_conv(xi, params["conv_w"].astype(x.dtype),
+                         params["conv_b"].astype(x.dtype))
+    xi = jax.nn.silu(xi)
+    proj = xi @ params["x_proj"].astype(x.dtype)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(x.dtype)
+                         + params["dt_bias"].astype(x.dtype)).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])                      # (DI, DS)
+    y = _selective_scan_fused(dt, xi.astype(jnp.float32),
+                              Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+                              A, chunk)
+    y = y + params["D"] * xi.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def mamba_init_state(batch: int, d_model: int, d_state: int, conv_dim: int):
+    d_inner, _ = mamba_dims(d_model, d_state)
+    return {
+        "conv": jnp.zeros((batch, conv_dim - 1, d_inner), jnp.float32),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params, x, state, d_state: int):
+    """x: (B,1,d) single step."""
+    B, _, d = x.shape
+    d_inner, dt_rank = mamba_dims(d, d_state)
+    xz = x @ params["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(xi, params["conv_w"].astype(x.dtype),
+                                  params["conv_b"].astype(x.dtype),
+                                  state["conv"])
+    xi = jax.nn.silu(xi)
+    proj = xi @ params["x_proj"].astype(x.dtype)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(x.dtype)
+                         + params["dt_bias"].astype(x.dtype)).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)                          # (B,DI,DS)
+    dBx = (dt[:, 0] * xi[:, 0].astype(jnp.float32))[..., None] \
+        * Bc[:, 0].astype(jnp.float32)[:, None, :]
+    h = dA * state["ssm"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, Cc[:, 0].astype(jnp.float32))
+    y = y + params["D"] * xi[:, 0].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    return y @ params["out_proj"].astype(x.dtype), \
+        {"conv": conv_state.astype(jnp.float32), "ssm": h}
+
+
+# ============================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ============================================================================
+
+
+def mlstm_dims(d_model: int, num_heads: int):
+    d_inner = 2 * d_model
+    dh = d_inner // num_heads
+    return d_inner, dh
+
+
+QKV_BLOCK = 4  # official xLSTM proj_blocksize
+
+
+def mlstm_init(key, d_model: int, num_heads: int, conv_dim: int, dtype):
+    d_inner, dh = mlstm_dims(d_model, num_heads)
+    nb = d_inner // QKV_BLOCK
+    ks = jax.random.split(key, 8)
+    params = {
+        "up_proj": _init_array(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": _init_array(ks[1], (conv_dim, d_inner), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        # block-diagonal qkv with block size 4 (xLSTM proj_blocksize=4)
+        "wq": _init_array(ks[2], (nb, QKV_BLOCK, QKV_BLOCK), dtype),
+        "wk": _init_array(ks[3], (nb, QKV_BLOCK, QKV_BLOCK), dtype),
+        "wv": _init_array(ks[4], (nb, QKV_BLOCK, QKV_BLOCK), dtype),
+        "w_if": _init_array(ks[5], (d_inner, 2 * num_heads), dtype, scale=0.02),
+        "b_i": jnp.zeros((num_heads,), jnp.float32),
+        "b_f": jnp.full((num_heads,), 3.0, jnp.float32),  # open forget gates
+        "out_norm": jnp.ones((d_inner,), dtype),
+        "down_proj": _init_array(ks[7], (d_inner, d_model), dtype),
+    }
+    specs = {
+        "up_proj": ("embed", "ff"), "conv_w": (None, "ff"), "conv_b": ("ff",),
+        "wq": ("ff", None, None), "wk": ("ff", None, None),
+        "wv": ("ff", None, None), "w_if": ("ff", None),
+        "b_i": (None,), "b_f": (None,), "out_norm": ("ff",),
+        "down_proj": ("ff", "embed"),
+    }
+    return params, specs
+
+
+def _blockdiag(x, w):
+    """x: (..., d_inner), w: (nb, blk, blk) block-diagonal matmul."""
+    nb, blk, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, blk))
+    return jnp.einsum("...ni,nij->...nj", xs, w).reshape(x.shape)
+
+
+def _mlstm_scan(q, k, v, i_pre, f_pre, chunk: int = 128):
+    """Exponential-gated matrix memory, stabilized (xLSTM eqs. 19-27).
+
+    q,k,v: (B,S,H,dh) fp32; i_pre,f_pre: (B,S,H) pre-activations.
+    Sequential lax.scan over chunks of tokens; within a chunk the scan is
+    over single tokens (the stabilized gating is order-dependent).
+    """
+    B, S, H, dh = q.shape
+
+    def step(carry, xs):
+        C, n, m = carry                  # C:(B,H,dh,dh) n:(B,H,dh) m:(B,H)
+        qt, kt, vt, it, ft = xs          # (B,H,dh), (B,H)
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = f_[..., None] * n + i_[..., None] * kt
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)),
+                            jnp.exp(-m_new))
+        h = jnp.einsum("bhdk,bhd->bhk", C, qt) / denom[..., None]
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    (_, _, _), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 0, 2, 3)      # (B,S,H,dh)
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk: int = 256):
+    """Chunkwise-parallel mLSTM (TFLA-style), exactly equal to the
+    sequential stabilized recurrence.
+
+    PERF NOTE (EXPERIMENTS.md §Perf, xlstm H1): the sequential scan
+    rewrites the dh×dh matrix memory C per TOKEN — B·H·dh²·8 bytes × S ×
+    layers of HBM traffic (measured 132.5 PB/device on train_4k). Here C
+    materializes once per CHUNK; intra-chunk work becomes (L×L) and
+    (L×dh) MXU matmuls. Derivation: with b=cumsum(f̃), g=ĩ−b,
+    M_t=max(m₀, cummax g), the stabilized weights are
+        intra:  D[t,s] = exp(g_s − M_t)  (s ≤ t, always ≤ 1)
+        inter:  exp(m₀ − M_t) on the carried (C₀, n₀)
+        carry:  C_L = Σ_s exp(g_s − M_L) k_s v_sᵀ + exp(m₀ − M_L) C₀,
+                m_L = b_L + M_L
+    q,k,v: (B,S,H,dh) fp32 (k pre-scaled by dh^-0.5); i/f_pre: (B,S,H)."""
+    B, S, H, dh = q.shape
+    L = min(chunk, S)
+    nc = S // L
+    assert nc * L == S, f"seq {S} not divisible by chunk {L}"
+    fold = lambda t: t.reshape((B, nc, L) + t.shape[2:]).transpose(  # noqa: E731
+        1, 0, 2, *range(3, t.ndim + 1))
+    qc, kc, vc = fold(q), fold(k), fold(v)
+    ic, fc = fold(i_pre), fold(f_pre)
+
+    def chunk_step(carry, xs):
+        C0, n0, m0 = carry                        # (B,H,dh,dh),(B,H,dh),(B,H)
+        qj, kj, vj, ij, fj = xs                   # (B,L,H,dh) / (B,L,H)
+        b = jnp.cumsum(fj, axis=1)                # (B,L,H)
+        g = ij - b
+        M = jnp.maximum(m0[:, None], jax.lax.cummax(g, axis=1))
+        inter = jnp.exp(m0[:, None] - M)          # (B,L,H)
+        # D[t,s] = exp(g_s - M_t), causal, exponents always <= 0
+        D = jnp.exp(g[:, None, :, :].transpose(0, 3, 1, 2)
+                    - M.transpose(0, 2, 1)[..., None])  # (B,H,L,L): [t,s]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(causal[None, None], D, 0.0)
+        sqk = jnp.einsum("blhd,bshd->bhls", qj, kj)         # (B,H,L,L)
+        W = D * sqk
+        num = jnp.einsum("bhls,bshd->blhd", W, vj) \
+            + inter[..., None] * jnp.einsum("blhd,bhde->blhe", qj, C0)
+        nq = W.sum(-1).transpose(0, 2, 1) \
+            + inter * jnp.einsum("blhd,bhd->blh", qj, n0)   # (B,L,H)
+        m_t = b + M
+        denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_t))
+        h = num / denom[..., None]
+        # carry to next chunk
+        ML = M[:, -1]                                       # (B,H)
+        wL = jnp.exp(g - ML[:, None])                       # (B,L,H)
+        C_new = jnp.einsum("blh,blhd,blhe->bhde", wL, kj, vj) \
+            + jnp.exp(m0 - ML)[..., None, None] * C0
+        n_new = jnp.einsum("blh,blhd->bhd", wL, kj) \
+            + jnp.exp(m0 - ML)[..., None] * n0
+        m_new = b[:, -1] + ML
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+
+
+def mlstm_apply(params, x, num_heads: int, impl: str = "chunked",
+                chunk: int = 256):
+    B, S, d = x.shape
+    d_inner, dh = mlstm_dims(d, num_heads)
+    up = x @ params["up_proj"].astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc, _ = _causal_conv(xm, params["conv_w"].astype(x.dtype),
+                         params["conv_b"].astype(x.dtype))
+    xc = jax.nn.silu(xc)
+    q = _blockdiag(xc, params["wq"].astype(x.dtype)).reshape(B, S, num_heads, dh)
+    k = (_blockdiag(xc, params["wk"].astype(x.dtype)) * (dh ** -0.5)
+         ).reshape(B, S, num_heads, dh)
+    v = _blockdiag(xm, params["wv"].astype(x.dtype)).reshape(B, S, num_heads, dh)
+    gates = xc @ params["w_if"].astype(x.dtype)
+    i_pre = gates[..., :num_heads].astype(jnp.float32) + params["b_i"]
+    f_pre = jax.nn.log_sigmoid(
+        gates[..., num_heads:].astype(jnp.float32) + params["b_f"])
+    args = (q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), i_pre, f_pre)
+    if impl == "chunked" and S % min(chunk, S) == 0:
+        h = _mlstm_chunkwise(*args, chunk=chunk)
+    else:
+        h = _mlstm_scan(*args)
+    h = h.reshape(B, S, d_inner).astype(x.dtype) * params["out_norm"].astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    return h @ params["down_proj"].astype(x.dtype)
+
+
+def mlstm_init_state(batch: int, d_model: int, num_heads: int, conv_dim: int):
+    d_inner, dh = mlstm_dims(d_model, num_heads)
+    return {
+        "conv": jnp.zeros((batch, conv_dim - 1, d_inner), jnp.float32),
+        "C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+        "m": jnp.zeros((batch, num_heads), jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, state, num_heads: int):
+    B, _, d = x.shape
+    d_inner, dh = mlstm_dims(d, num_heads)
+    up = x @ params["up_proj"].astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = _causal_conv(xm, params["conv_w"].astype(x.dtype),
+                                  params["conv_b"].astype(x.dtype),
+                                  state["conv"])
+    xc = jax.nn.silu(xc)[:, 0]
+    q = _blockdiag(xc, params["wq"].astype(x.dtype)
+                   ).reshape(B, num_heads, dh).astype(jnp.float32)
+    k = (_blockdiag(xc, params["wk"].astype(x.dtype)) * (dh ** -0.5)
+         ).reshape(B, num_heads, dh).astype(jnp.float32)
+    v = _blockdiag(xm[:, 0], params["wv"].astype(x.dtype)
+                   ).reshape(B, num_heads, dh).astype(jnp.float32)
+    gates = xc @ params["w_if"].astype(x.dtype)
+    it = gates[..., :num_heads].astype(jnp.float32) + params["b_i"]
+    ft = jax.nn.log_sigmoid(gates[..., num_heads:].astype(jnp.float32)
+                            + params["b_f"])
+    m_new = jnp.maximum(ft + state["m"], it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + state["m"] - m_new)
+    C = f_[..., None, None] * state["C"] + i_[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_[..., None] * state["n"] + i_[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                        jnp.exp(-m_new))
+    h = jnp.einsum("bhdk,bhd->bhk", C, q) / denom[..., None]
+    h = h.reshape(B, 1, d_inner).astype(x.dtype) * params["out_norm"].astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    return h @ params["down_proj"].astype(x.dtype), \
+        {"conv": conv_state.astype(jnp.float32), "C": C, "n": n, "m": m_new}
+
+
+# ============================================================================
+# sLSTM (xLSTM scalar-memory block)
+# ============================================================================
+
+
+def slstm_init(key, d_model: int, num_heads: int, conv_dim: int, dtype):
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 6)
+    params = {
+        "conv_w": _init_array(ks[0], (conv_dim, d_model), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_model,), dtype),
+        "w_zifo": _init_array(ks[1], (d_model, 4 * d_model), dtype),
+        # recurrent block-diagonal per head
+        "r_zifo": _init_array(ks[2], (4, num_heads, dh, dh), dtype, scale=0.02),
+        "b_zifo": jnp.zeros((4 * d_model,), jnp.float32),
+        "norm": jnp.ones((d_model,), dtype),
+        "up": _init_array(ks[3], (d_model, 2 * (4 * d_model // 3)), dtype),
+        "down": _init_array(ks[4], (4 * d_model // 3, d_model), dtype),
+    }
+    specs = {
+        "conv_w": (None, "embed"), "conv_b": ("embed",),
+        "w_zifo": ("embed", None), "r_zifo": (None, "heads", None, None),
+        "b_zifo": (None,), "norm": ("embed",),
+        "up": ("embed", "ff"), "down": ("ff", "embed"),
+    }
+    return params, specs
+
+
+def _slstm_cell(params, wz, wi, wf, wo, h_prev, c_prev, n_prev, m_prev,
+                num_heads: int):
+    """One sLSTM step. All (B, d_model) fp32 except params."""
+    B, d = wz.shape
+    dh = d // num_heads
+    hp = h_prev.reshape(B, num_heads, dh)
+    r = params["r_zifo"].astype(jnp.float32)
+    rz = jnp.einsum("bhd,hde->bhe", hp, r[0]).reshape(B, d)
+    ri = jnp.einsum("bhd,hde->bhe", hp, r[1]).reshape(B, d)
+    rf = jnp.einsum("bhd,hde->bhe", hp, r[2]).reshape(B, d)
+    ro = jnp.einsum("bhd,hde->bhe", hp, r[3]).reshape(B, d)
+    z = jnp.tanh(wz + rz)
+    i_pre = wi + ri
+    f_pre = jax.nn.log_sigmoid(wf + rf)
+    o = jax.nn.sigmoid(wo + ro)
+    m_new = jnp.maximum(f_pre + m_prev, i_pre)
+    i_ = jnp.exp(i_pre - m_new)
+    f_ = jnp.exp(f_pre + m_prev - m_new)
+    c = f_ * c_prev + i_ * z
+    n = f_ * n_prev + i_
+    h = o * c / jnp.maximum(n, 1e-6)
+    return h, c, n, m_new
+
+
+def slstm_apply(params, x, num_heads: int):
+    B, S, d = x.shape
+    xc, _ = _causal_conv(x, params["conv_w"].astype(x.dtype),
+                         params["conv_b"].astype(x.dtype))
+    xc = jax.nn.silu(xc)
+    pre = (xc @ params["w_zifo"].astype(x.dtype)).astype(jnp.float32) \
+        + params["b_zifo"]
+    wz, wi, wf, wo = jnp.split(pre, 4, axis=-1)
+
+    def step(carry, xs):
+        h, c, n, m = carry
+        z_t, i_t, f_t, o_t = xs
+        h, c, n, m = _slstm_cell(params, z_t, i_t, f_t, o_t, h, c, n, m,
+                                 num_heads)
+        return (h, c, n, m), h
+
+    zero = jnp.zeros((B, d), jnp.float32)
+    (_, _, _, _), hs = jax.lax.scan(
+        step, (zero, zero, zero, zero),
+        (wz.transpose(1, 0, 2), wi.transpose(1, 0, 2),
+         wf.transpose(1, 0, 2), wo.transpose(1, 0, 2)))
+    h = hs.transpose(1, 0, 2).astype(x.dtype) * params["norm"].astype(x.dtype)
+    up = h @ params["up"].astype(x.dtype)
+    a, b = jnp.split(up, 2, axis=-1)
+    return (jax.nn.gelu(a) * b) @ params["down"].astype(x.dtype)
+
+
+def slstm_init_state(batch: int, d_model: int):
+    zero = jnp.zeros((batch, d_model), jnp.float32)
+    return {"h": zero, "c": zero, "n": zero, "m": zero,
+            "conv": jnp.zeros((batch, 3, d_model), jnp.float32)}
+
+
+def slstm_decode(params, x, state, num_heads: int, conv_dim: int = 4):
+    B, _, d = x.shape
+    xc, conv_state = _causal_conv(x, params["conv_w"].astype(x.dtype),
+                                  params["conv_b"].astype(x.dtype),
+                                  state["conv"])
+    xc = jax.nn.silu(xc)[:, 0]
+    pre = (xc @ params["w_zifo"].astype(x.dtype)).astype(jnp.float32) \
+        + params["b_zifo"]
+    wz, wi, wf, wo = jnp.split(pre, 4, axis=-1)
+    h, c, n, m = _slstm_cell(params, wz, wi, wf, wo, state["h"], state["c"],
+                             state["n"], state["m"], num_heads)
+    out = h[:, None].astype(x.dtype) * params["norm"].astype(x.dtype)
+    up = out @ params["up"].astype(x.dtype)
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a) * b) @ params["down"].astype(x.dtype)
+    return y, {"h": h, "c": c, "n": n, "m": m,
+               "conv": conv_state.astype(jnp.float32)}

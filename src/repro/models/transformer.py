@@ -1,0 +1,518 @@
+"""LM assembly: decoder-only / encoder-decoder / prefix-LM models built
+from the block pattern in a ModelConfig.
+
+Depth handling: the layer stack is grouped into repeating *periods* (the
+smallest repeating unit of (mixer kind, is_moe)); parameters are stacked
+per period-position and the stack is driven by `lax.scan` over periods.
+The compiled HLO is therefore O(period) in size, not O(num_layers) — this
+is what keeps the 512-device dry-run compiling in seconds for 94-layer
+configs. Roofline accounting multiplies while-body costs by the trip
+count (repro.analysis.roofline).
+
+Cross-entropy is computed in sequence chunks under jax.checkpoint so the
+(tokens × 150k-vocab) logits tensor never materializes at full length —
+the standard large-vocab memory fix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    BLOCK_ATTN, BLOCK_MAMBA, BLOCK_MLSTM, BLOCK_RWKV, BLOCK_SLSTM,
+    ModelConfig,
+)
+from repro.models import rwkv as rwkv_mod
+from repro.distributed.sharding import with_sharding_constraint
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    embed_apply, embed_init, mlp_apply, mlp_init, rmsnorm_apply, rmsnorm_init,
+    unembed_apply,
+)
+
+# ---------------------------------------------------------------------------
+# period structure
+# ---------------------------------------------------------------------------
+
+
+def layer_signature(cfg: ModelConfig, i: int) -> Tuple[str, bool]:
+    return (cfg.blocks()[i], cfg.is_moe_layer(i))
+
+
+def period_of(cfg: ModelConfig) -> int:
+    sigs = [layer_signature(cfg, i) for i in range(cfg.num_layers)]
+    for p in range(1, cfg.num_layers + 1):
+        if cfg.num_layers % p == 0 and all(
+                sigs[i] == sigs[i % p] for i in range(cfg.num_layers)):
+            return p
+    return cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, kind: str, is_moe: bool,
+                cross: bool, dtype):
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    n1, n1s = rmsnorm_init(cfg.d_model, dtype)
+    params["norm1"], specs["norm1"] = n1, n1s
+    if kind == BLOCK_ATTN:
+        p, s = attn.attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                              cfg.num_kv_heads, cfg.resolved_head_dim, dtype,
+                              qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)
+    elif kind == BLOCK_MAMBA:
+        p, s = ssm.mamba_init(ks[0], cfg.d_model, cfg.ssm_state_dim,
+                              cfg.ssm_conv_dim, dtype)
+    elif kind == BLOCK_MLSTM:
+        p, s = ssm.mlstm_init(ks[0], cfg.d_model, cfg.num_heads,
+                              cfg.ssm_conv_dim, dtype)
+    elif kind == BLOCK_SLSTM:
+        p, s = ssm.slstm_init(ks[0], cfg.d_model, cfg.num_heads,
+                              cfg.ssm_conv_dim, dtype)
+    elif kind == BLOCK_RWKV:
+        p, s = rwkv_mod.timemix_init(ks[0], cfg.d_model, cfg.num_heads, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    params["mixer"], specs["mixer"] = p, s
+    if kind == BLOCK_RWKV:
+        n2, n2s = rmsnorm_init(cfg.d_model, dtype)
+        cm, cms = rwkv_mod.channelmix_init(ks[3], cfg.d_model, dtype)
+        params["norm2"], specs["norm2"] = n2, n2s
+        params["channel_mix"], specs["channel_mix"] = cm, cms
+        return params, specs
+    if cross:
+        cn, cns = rmsnorm_init(cfg.d_model, dtype)
+        cp, cps = attn.attn_init(ks[1], cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 dtype)
+        params["cross_norm"], specs["cross_norm"] = cn, cns
+        params["cross"], specs["cross"] = cp, cps
+    has_ffn = cfg.d_ff > 0 or is_moe
+    if has_ffn and kind not in (BLOCK_MLSTM, BLOCK_SLSTM):
+        n2, n2s = rmsnorm_init(cfg.d_model, dtype)
+        params["norm2"], specs["norm2"] = n2, n2s
+        if is_moe:
+            p, s = moe_mod.moe_init(ks[2], cfg.d_model, cfg.moe.d_ff,
+                                    cfg.moe.num_experts, dtype,
+                                    gated=cfg.mlp_gated)
+            params["moe"], specs["moe"] = p, s
+        else:
+            p, s = mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                            gated=cfg.mlp_gated)
+            params["mlp"], specs["mlp"] = p, s
+    return params, specs
+
+
+def _block_apply(params, cfg: ModelConfig, kind: str, is_moe: bool, x,
+                 *, mask_mode: str, impl: str, positions=None,
+                 enc_memory=None, prefix_len: int = 0):
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+    if kind == BLOCK_ATTN:
+        mix = attn.attn_apply(
+            params["mixer"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            positions=positions, mask_mode=mask_mode, window=cfg.attn_window,
+            prefix_len=prefix_len, rope_theta=cfg.rope_theta,
+            use_rope=(cfg.pos_embedding == "rope"), qk_norm=cfg.qk_norm,
+            impl=impl)
+    elif kind == BLOCK_MAMBA:
+        mix = ssm.mamba_apply(params["mixer"], h, cfg.ssm_state_dim)
+    elif kind == BLOCK_MLSTM:
+        mix = ssm.mlstm_apply(params["mixer"], h, cfg.num_heads)
+    elif kind == BLOCK_RWKV:
+        mix = rwkv_mod.timemix_apply(params["mixer"], h, cfg.num_heads,
+                                     impl="scan")
+    else:
+        mix = ssm.slstm_apply(params["mixer"], h, cfg.num_heads)
+    x = x + mix
+    if "channel_mix" in params:
+        h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        x = x + rwkv_mod.channelmix_apply(params["channel_mix"], h)
+        x = with_sharding_constraint(x, ("batch", "seq", "embed_act"))
+        return x, aux
+    if "cross" in params:
+        h = rmsnorm_apply(params["cross_norm"], x, cfg.norm_eps)
+        x = x + attn.attn_apply(
+            params["cross"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            kv_x=enc_memory, mask_mode="full", use_rope=False, impl=impl)
+    if "mlp" in params:
+        h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        x = x + mlp_apply(params["mlp"], h, gated=cfg.mlp_gated)
+    elif "moe" in params:
+        h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        out, a = moe_mod.moe_apply(params["moe"], h, top_k=cfg.moe.top_k,
+                                   capacity_factor=cfg.moe.capacity_factor,
+                                   gated=cfg.mlp_gated)
+        x = x + out
+        aux = aux + a
+    x = with_sharding_constraint(x, ("batch", "seq", "embed_act"))
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def lm_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    period = period_of(cfg)
+    n_periods = cfg.num_layers // period
+    keys = jax.random.split(key, period + 5)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+
+    emb, emb_s = embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+    params["embed"] = emb
+    if cfg.tie_embeddings:
+        specs["embed"] = emb_s  # doubles as the LM head: vocab-sharded
+    else:
+        # input-only table: a vocab-sharded gather reshards badly (XLA
+        # "involuntary full rematerialization" on multi-pod); replicate
+        # vocab, FSDP-shard the embed dim instead (H2-E2, EXPERIMENTS.md)
+        specs["embed"] = {"table": ("in_vocab", "embed")}
+
+    layers_p, layers_s = {}, {}
+    for pos in range(period):
+        kind, is_moe = layer_signature(cfg, pos)
+
+        def init_one(k, _kind=kind, _moe=is_moe):
+            p, _ = _block_init(k, cfg, _kind, _moe,
+                               cross=cfg.cross_attention, dtype=dtype)
+            return p
+
+        stacked = jax.vmap(init_one)(jax.random.split(keys[1 + pos], n_periods))
+        _, s = _block_init(keys[1 + pos], cfg, kind, is_moe,
+                           cross=cfg.cross_attention, dtype=dtype)
+        layers_p[f"p{pos}"] = stacked
+        layers_s[f"p{pos}"] = jax.tree_util.tree_map(
+            lambda spec: ("layers",) + tuple(spec), s,
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                isinstance(e, (str, type(None))) for e in t))
+    params["layers"], specs["layers"] = layers_p, layers_s
+
+    fn, fns = rmsnorm_init(cfg.d_model, dtype)
+    params["final_norm"], specs["final_norm"] = fn, fns
+    if not cfg.tie_embeddings:
+        head, head_s = embed_init(keys[period + 1], cfg.vocab_size,
+                                  cfg.d_model, dtype)
+        params["lm_head"], specs["lm_head"] = head, head_s
+
+    if cfg.encoder_layers:
+        def enc_init_one(k):
+            p, _ = _block_init(k, cfg, BLOCK_ATTN, False, cross=False,
+                               dtype=dtype)
+            return p
+
+        stacked = jax.vmap(enc_init_one)(
+            jax.random.split(keys[period + 2], cfg.encoder_layers))
+        _, s = _block_init(keys[period + 2], cfg, BLOCK_ATTN, False,
+                           cross=False, dtype=dtype)
+        enc_s = jax.tree_util.tree_map(
+            lambda spec: ("layers",) + tuple(spec), s,
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                isinstance(e, (str, type(None))) for e in t))
+        en, ens = rmsnorm_init(cfg.d_model, dtype)
+        params["encoder"] = {"layers": stacked, "norm": en}
+        specs["encoder"] = {"layers": enc_s, "norm": ens}
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def encoder_apply(params, cfg: ModelConfig, frames, impl: str = "chunked",
+                  remat: str = "none"):
+    """frames: (B, S_enc, d_model) precomputed frontend embeddings."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(carry, layer_params):
+        h, _ = _block_apply(layer_params, cfg, BLOCK_ATTN, False, carry,
+                            mask_mode="full", impl=impl)
+        return h, None
+
+    x, _ = jax.lax.scan(_remat_wrap(body, remat), x,
+                        params["encoder"]["layers"])
+    return rmsnorm_apply(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def lm_apply(params, cfg: ModelConfig, tokens, *, impl: str = "chunked",
+             remat: str = "none", prefix_embeds=None, enc_memory=None,
+             return_hidden: bool = False):
+    """tokens: (B, S) int32. prefix_embeds: (B, P, d) modality stub input.
+    enc_memory: (B, S_enc, d) encoder output for cross-attention."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens).astype(dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        prefix_len = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    x = with_sharding_constraint(x, ("batch", "seq", "embed_act"))
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    mask_mode = "prefix" if (cfg.prefix_lm and prefix_len) else "causal"
+    period = period_of(cfg)
+
+    def period_body(carry, period_params):
+        h, aux = carry
+        for pos in range(period):
+            kind, is_moe = layer_signature(cfg, pos)
+            h, a = _block_apply(period_params[f"p{pos}"], cfg, kind, is_moe,
+                                h, mask_mode=mask_mode, impl=impl,
+                                positions=positions, enc_memory=enc_memory,
+                                prefix_len=prefix_len)
+            aux = aux + a
+        return (h, aux), None
+
+    (x, aux), _ = jax.lax.scan(_remat_wrap(period_body, remat),
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed_apply(table, x), aux
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked cross-entropy)
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(hidden, table, targets, valid, chunk: int = 512,
+                 label_smoothing: float = 0.0):
+    """hidden: (B,S,d); table: (V,d); targets/valid: (B,S). Mean NLL over
+    valid positions, computed per sequence-chunk under jax.checkpoint so
+    full-length logits never materialize."""
+    B, S, d = hidden.shape
+    V = table.shape[0]
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    hs = hidden.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+    vs = valid.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h, t, v):
+        logits = (h @ table.astype(h.dtype).T).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = lse - tgt
+        if label_smoothing > 0.0:
+            nll = (1 - label_smoothing) * nll + label_smoothing * (
+                lse - logits.mean(-1))
+        return (nll * v).sum(), v.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        l, n = chunk_loss(*xs)
+        return (tot + l, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ts, vs.astype(jnp.float32)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            impl: str = "chunked", remat: str = "none",
+            aux_weight: float = 0.01, label_smoothing: float = 0.0):
+    """batch: tokens (B,S) [+ frames / patches for enc-dec / vlm]."""
+    tokens = batch["tokens"]
+    enc_memory = None
+    prefix = batch.get("patches")
+    if cfg.encoder_layers:
+        enc_memory = encoder_apply(params, cfg, batch["frames"], impl, remat)
+    hidden, aux = lm_apply(params, cfg, tokens, impl=impl, remat=remat,
+                           prefix_embeds=prefix, enc_memory=enc_memory,
+                           return_hidden=True)
+    if prefix is not None:  # loss only over the text region
+        hidden = hidden[:, prefix.shape[1]:]
+    table = (params["embed"] if cfg.tie_embeddings else params["lm_head"])["table"]
+    targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    valid = jnp.pad(jnp.ones_like(tokens[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+    nll = chunked_xent(hidden, table, targets, valid,
+                       label_smoothing=label_smoothing)
+    loss = nll + aux_weight * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, enc_len: Optional[int] = None):
+    """Returns (cache pytree, cache logical-axis specs)."""
+    period = period_of(cfg)
+    n_periods = cfg.num_layers // period
+    hd = cfg.resolved_head_dim
+    cache: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    for pos in range(period):
+        kind, _ = layer_signature(cfg, pos)
+        if kind == BLOCK_ATTN:
+            c = {"k": jnp.zeros((n_periods, batch, max_seq, cfg.num_kv_heads,
+                                 hd), dtype),
+                 "v": jnp.zeros((n_periods, batch, max_seq, cfg.num_kv_heads,
+                                 hd), dtype)}
+            s = {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+                 "v": ("layers", "batch", "kv_seq", "kv_heads", None)}
+            if cfg.cross_attention:
+                if enc_len is None:
+                    enc_len = cfg.num_prefix_embeddings or 1500
+                c["ck"] = jnp.zeros((n_periods, batch, enc_len,
+                                     cfg.num_kv_heads, hd), dtype)
+                c["cv"] = jnp.zeros_like(c["ck"])
+                s["ck"] = ("layers", "batch", None, "kv_heads", None)
+                s["cv"] = s["ck"]
+        elif kind == BLOCK_MAMBA:
+            st = ssm.mamba_init_state(batch, cfg.d_model, cfg.ssm_state_dim,
+                                      cfg.ssm_conv_dim)
+            c = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n_periods,) + x.shape, x.dtype), st)
+            s = {"conv": ("layers", "batch", None, "ff"),
+                 "ssm": ("layers", "batch", "ff", None)}
+        elif kind == BLOCK_MLSTM:
+            st = ssm.mlstm_init_state(batch, cfg.d_model, cfg.num_heads,
+                                      cfg.ssm_conv_dim)
+            c = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n_periods,) + x.shape, x.dtype), st)
+            s = {"conv": ("layers", "batch", None, "ff"),
+                 "C": ("layers", "batch", "heads", None, None),
+                 "n": ("layers", "batch", "heads", None),
+                 "m": ("layers", "batch", "heads")}
+        elif kind == BLOCK_RWKV:
+            st = rwkv_mod.rwkv_init_state(batch, cfg.d_model, cfg.num_heads)
+            c = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n_periods,) + x.shape, x.dtype), st)
+            s = {"tm_shift": ("layers", "batch", "embed_act"),
+                 "cm_shift": ("layers", "batch", "embed_act"),
+                 "S": ("layers", "batch", "heads", None, None)}
+        else:  # slstm
+            st = ssm.slstm_init_state(batch, cfg.d_model)
+            c = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n_periods,) + x.shape, x.dtype), st)
+            s = {"h": ("layers", "batch", "embed_act"),
+                 "c": ("layers", "batch", "embed_act"),
+                 "n": ("layers", "batch", "embed_act"),
+                 "m": ("layers", "batch", "embed_act"),
+                 "conv": ("layers", "batch", None, "embed_act")}
+        cache[f"p{pos}"] = c
+        specs[f"p{pos}"] = s
+    return cache, specs
+
+
+def _block_decode(params, cfg: ModelConfig, kind: str, x, cache, pos):
+    if kind == BLOCK_ATTN:
+        h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+        mix, ck, cv = attn.attn_decode(
+            params["mixer"], h, cache["k"], cache["v"], pos,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            use_rope=(cfg.pos_embedding == "rope"), qk_norm=cfg.qk_norm,
+            window=cfg.attn_window)
+        x = x + mix
+        new_cache = dict(cache, k=ck, v=cv)
+        if "cross" in params and "ck" in cache:
+            h = rmsnorm_apply(params["cross_norm"], x, cfg.norm_eps)
+            B = x.shape[0]
+            hd = cfg.resolved_head_dim
+            q = (h @ params["cross"]["wq"].astype(h.dtype)).reshape(
+                B, 1, cfg.num_heads, hd)
+            out = attn._ref_attention(
+                q, cache["ck"].astype(q.dtype), cache["cv"].astype(q.dtype),
+                jnp.zeros((1, cache["ck"].shape[1]), jnp.float32))
+            out = out.reshape(B, 1, cfg.num_heads * hd)
+            x = x + out @ params["cross"]["wo"].astype(out.dtype)
+    elif kind == BLOCK_MAMBA:
+        h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+        mix, new_cache = ssm.mamba_decode(params["mixer"], h, cache,
+                                          cfg.ssm_state_dim)
+        x = x + mix
+    elif kind == BLOCK_MLSTM:
+        h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+        mix, new_cache = ssm.mlstm_decode(params["mixer"], h, cache,
+                                          cfg.num_heads)
+        x = x + mix
+    elif kind == BLOCK_RWKV:
+        h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+        mix, tm_shift, S = rwkv_mod.timemix_decode(
+            params["mixer"], h, cache["tm_shift"], cache["S"], cfg.num_heads)
+        x = x + mix
+        h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        cm_out, cm_shift = rwkv_mod.channelmix_decode(
+            params["channel_mix"], h, cache["cm_shift"])
+        x = x + cm_out
+        return x, {"tm_shift": tm_shift, "cm_shift": cm_shift, "S": S}
+    else:
+        h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+        mix, new_cache = ssm.slstm_decode(params["mixer"], h, cache,
+                                          cfg.num_heads, cfg.ssm_conv_dim)
+        x = x + mix
+    if "mlp" in params:
+        h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        x = x + mlp_apply(params["mlp"], h, gated=cfg.mlp_gated)
+    elif "moe" in params:
+        h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        out, _ = moe_mod.moe_apply(params["moe"], h, top_k=cfg.moe.top_k,
+                                   capacity_factor=cfg.moe.capacity_factor,
+                                   gated=cfg.mlp_gated)
+        x = x + out
+    return x, new_cache
+
+
+def lm_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One decode step. tokens: (B,1) int32; pos: scalar int32 position.
+
+    Returns (logits (B,1,V) fp32, new cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens).astype(dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    period = period_of(cfg)
+
+    def body(carry, xs):
+        h = carry
+        period_params, period_cache = xs
+        new_cache = {}
+        for p in range(period):
+            kind, _ = layer_signature(cfg, p)
+            h, new_cache[f"p{p}"] = _block_decode(
+                period_params[f"p{p}"], cfg, kind, h, period_cache[f"p{p}"],
+                pos)
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed_apply(table, x).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,8 @@
+from repro.train.optimizer import (
+    adamw_init, adamw_update, adafactor_init, adafactor_update,
+    make_optimizer, lr_schedule, global_norm_clip,
+)
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, \
+    latest_checkpoint
+from repro.train.trainer import Trainer, TrainState
+from repro.train.compression import int8_ef_compress, int8_ef_decompress

@@ -1,0 +1,55 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 quantization with error feedback (EF-SGD style): gradients are
+quantized per-tensor to int8 before the slow cross-pod reduction; the
+quantization residual is carried host-side into the next step, so the
+scheme is unbiased over time. Intra-pod (fast ICI) reductions stay fp32 —
+only the "pod" axis pays the compression, which is where the 10×
+bandwidth saving matters at 1000+ node scale.
+
+Usage inside a shard_map'd step (see Trainer.grad_sync):
+    q, scale, err = int8_ef_compress(g + err_prev)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), "pod")
+    g = int8_ef_decompress(q_sum, scale_sum) / npods
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_ef_compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                              jnp.ndarray]:
+    """-> (int8 values, fp32 scale, fp32 residual error)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    err = g32 - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def int8_ef_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, errors):
+    """Apply EF compression leaf-wise. errors may be None (first step)."""
+    if errors is None:
+        errors = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    qs, scales, errs = [], [], []
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    for g, e in zip(flat_g, flat_e):
+        q, s, err = int8_ef_compress(g.astype(jnp.float32) + e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(err)
+    unf = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)  # noqa: E731
+    return unf(qs), unf(scales), unf(errs)
+
+
+def decompress_tree(qs, scales):
+    return jax.tree_util.tree_map(int8_ef_decompress, qs, scales)

@@ -1,0 +1,69 @@
+"""Launcher-side fault tolerance: supervised restart loop + elastic notes.
+
+At 1000+ node scale the dominant failures are (a) preemption/eviction,
+(b) hardware faults on a host, (c) stragglers. The division of labor:
+
+  - Trainer.install_preemption_handler: in-process SIGTERM -> checkpoint
+    -> exit(42).
+  - `supervise()` (here): re-exec the training entrypoint while exits are
+    retryable (42 = preemption, 137 = OOM-kill/SIGKILL, nonzero crash up
+    to `max_restarts`). Restore is automatic via Trainer.restore().
+  - Elasticity: checkpoints are mesh-agnostic (logical layout), and the
+    data stream is a pure function of step — so a restart may come back
+    with a DIFFERENT device count: pass the new mesh, shardings re-derive.
+  - Stragglers: Trainer's watchdog flags slow steps; at the control-plane
+    level `supervise` restarts with a `blocklist` env the launcher can use
+    to exclude hosts (simulated offline).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from typing import Callable, List, Optional
+
+from repro.utils.log import get_logger
+
+log = get_logger("repro.ft")
+
+RETRYABLE_EXITS = {42, 137, 139, 143}
+
+
+def supervise(cmd: List[str], max_restarts: int = 100,
+              backoff_s: float = 2.0, env: Optional[dict] = None) -> int:
+    """Run `cmd` under restart supervision. Returns final exit code."""
+    restarts = 0
+    while True:
+        t0 = time.monotonic()
+        proc = subprocess.run(cmd, env={**os.environ, **(env or {})})
+        code = proc.returncode
+        if code == 0:
+            log.info("job finished cleanly after %d restarts", restarts)
+            return 0
+        if restarts >= max_restarts:
+            log.error("giving up after %d restarts (exit %d)", restarts, code)
+            return code
+        if code in RETRYABLE_EXITS or (time.monotonic() - t0) > 60:
+            restarts += 1
+            log.warning("restart %d after exit %d", restarts, code)
+            time.sleep(backoff_s)
+            continue
+        log.error("non-retryable fast failure (exit %d)", code)
+        return code
+
+
+def run_with_restarts(step_fn: Callable[[], None], max_restarts: int = 3):
+    """In-process variant for tests: call step_fn, retrying on SystemExit
+    with a retryable code (simulates the supervisor without processes)."""
+    for attempt in range(max_restarts + 1):
+        try:
+            step_fn()
+            return attempt
+        except SystemExit as e:
+            if e.code in RETRYABLE_EXITS and attempt < max_restarts:
+                log.warning("in-process restart %d (exit %s)", attempt + 1,
+                            e.code)
+                continue
+            raise
+    return max_restarts

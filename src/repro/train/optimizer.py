@@ -1,0 +1,206 @@
+"""Optimizers (no optax offline): AdamW and factored Adafactor.
+
+State sharding: every moment tensor inherits its parameter's logical-axis
+spec, so under the FSDP rules ("embed" -> data axis) optimizer states are
+automatically ZeRO-3 sharded — each device holds 1/256th of m/v for the
+300B+ configs. Adafactor stores row/col second-moment factors only
+(O(n+m) instead of O(nm)) which is what lets 398B-param Jamba training
+fit v5e HBM (DESIGN.md §4).
+
+Updates run in fp32 regardless of param dtype; bf16 params are cast on
+write ("keep master in the moments" trick: m is fp32, so no separate
+master copy is required at bf16 precision loss below lr*eps).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_norm
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def lr_schedule(step, *, base_lr: float, warmup_steps: int, total_steps: int,
+                min_ratio: float = 0.1):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+    prog = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                    0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos
+
+
+def global_norm_clip(grads, max_norm: float):
+    g = tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale, grads), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+# Layer-chunked updates (scan over the stacked-layer axis) were HYPOTHESIZED
+# to cut fp32 update transients ~num_layers×; MEASURED on grok-1 train_4k
+# they instead grew peak temp bytes 20.1→25.1 GB/chip (the scan's xs/ys
+# slicing adds stacked copies that outweigh the transient savings on the
+# XLA:CPU buffer assigner). Kept opt-in for real-TPU experiments.
+# See EXPERIMENTS.md §Perf (refuted hypothesis log).
+CHUNKED_UPDATE = False
+
+
+def _layer_chunked(upd, p, *args):
+    if not CHUNKED_UPDATE or p.ndim < 3 or p.shape[0] <= 1:
+        return upd(p, *args)
+
+    def body(_, xs):
+        return None, upd(*xs)
+
+    _, out = jax.lax.scan(body, None, (p,) + args)
+    return out
+
+
+def adamw_update(grads, state, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.01):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd_(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m, v
+
+    def upd(g, m, v, p):
+        return _layer_chunked(upd_, p, g, m, v)
+
+    out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; first moment kept for stability)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init_one(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    "m": jnp.zeros(p.shape, jnp.bfloat16)}
+        return {"v": jnp.zeros(p.shape, jnp.float32),
+                "m": jnp.zeros(p.shape, jnp.bfloat16)}
+
+    return {"slots": jax.tree_util.tree_map(init_one, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, *, lr, b1: float = 0.9,
+                     decay: float = 0.99, eps: float = 1e-30,
+                     weight_decay: float = 0.0, clip_threshold: float = 1.0):
+    count = state["count"] + 1
+
+    def upd_(p, g, slot):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if "vr" in slot:
+            vr = decay * slot["vr"] + (1 - decay) * g2.mean(-1)
+            vc = decay * slot["vc"] + (1 - decay) * g2.mean(-2)
+            denom = (vr[..., None] / jnp.maximum(
+                vr.mean(-1, keepdims=True)[..., None], eps)) * vc[..., None, :]
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = decay * slot["v"] + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_slot = {"v": v}
+        # update clipping (Adafactor's RMS trick)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        m = b1 * slot["m"].astype(jnp.float32) + (1 - b1) * u
+        step = m
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        new_slot["m"] = m.astype(jnp.bfloat16)
+        return new_p, new_slot
+
+    def upd(g, slot, p):
+        return _layer_chunked(lambda pp, gg, ss: upd_(pp, gg, ss), p, g, slot)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["slots"])
+    new_p, new_s = [], []
+    for g, s, p in zip(flat_g, flat_s, flat_p):
+        np_, ns_ = upd(g, s, p)
+        new_p.append(np_)
+        new_s.append(ns_)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            {"slots": jax.tree_util.tree_unflatten(treedef, new_s),
+             "count": count})
+
+
+# ---------------------------------------------------------------------------
+# optimizer state sharding specs
+# ---------------------------------------------------------------------------
+
+
+def adamw_state_specs(param_specs):
+    return {"m": param_specs, "v": param_specs, "count": ()}
+
+
+def adafactor_state_specs(param_specs):
+    def spec_one(spec):
+        spec = tuple(spec)
+        if len(spec) >= 2:
+            return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:], "m": spec}
+        return {"v": spec, "m": spec}
+
+    is_spec = lambda t: isinstance(t, tuple) and all(  # noqa: E731
+        isinstance(e, (str, type(None))) for e in t)
+    return {"slots": jax.tree_util.tree_map(spec_one, param_specs,
+                                            is_leaf=is_spec),
+            "count": ()}
+
+
+def make_optimizer(name: str):
+    """-> (init_fn, update_fn, state_specs_fn)"""
+    if name == "adamw":
+        return adamw_init, adamw_update, adamw_state_specs
+    if name == "adafactor":
+        return adafactor_init, adafactor_update, adafactor_state_specs
+    raise ValueError(f"unknown optimizer {name}")

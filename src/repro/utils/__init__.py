@@ -1,0 +1,12 @@
+from repro.utils.tree import (
+    tree_size_bytes,
+    tree_param_count,
+    tree_map_with_path_str,
+    tree_cast,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_norm,
+)
+from repro.utils.registry import Registry
+from repro.utils.log import get_logger

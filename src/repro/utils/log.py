@@ -1,0 +1,19 @@
+import logging
+import sys
+
+_CONFIGURED = False
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    global _CONFIGURED
+    if not _CONFIGURED:
+        h = logging.StreamHandler(sys.stderr)
+        h.setFormatter(
+            logging.Formatter("%(asctime)s %(levelname).1s %(name)s: %(message)s",
+                              datefmt="%H:%M:%S")
+        )
+        root = logging.getLogger("repro")
+        root.addHandler(h)
+        root.setLevel(logging.INFO)
+        _CONFIGURED = True
+    return logging.getLogger(name)

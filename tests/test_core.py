@@ -1,0 +1,227 @@
+"""SemanticBBV core: losses, clustering, simpoint, cross-program,
+order-invariance of the Stage-2 signature."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bbe import BBEConfig, bbe_init, encode_bbe, pretrain_loss
+from repro.core.clustering import kmeans, representatives
+from repro.core.crossprog import speedup, universal_clustering
+from repro.core.losses import (
+    cpi_consistency_loss, huber_loss, l2_normalize, triplet_loss,
+)
+from repro.core.signature import (
+    SignatureConfig, signature_apply, signature_init, stage2_loss,
+)
+from repro.core.simpoint import classic_bbv_matrix, run_simpoint
+
+TINY = BBEConfig(dim_embeds=(48, 8, 8, 8, 8, 8), num_layers=2, num_heads=2,
+                 bbe_dim=32, max_len=64)
+TINY_SIG = SignatureConfig(bbe_dim=32, d_model=32, sig_dim=16, max_set=16,
+                           num_heads=2)
+
+
+# --------------------------------------------------------------------- losses
+
+def test_triplet_loss_orders_correctly():
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randn(8, 16), jnp.float32)
+    near = a + 0.01 * jnp.asarray(rng.randn(8, 16), jnp.float32)
+    far = jnp.asarray(rng.randn(8, 16), jnp.float32)
+    good = float(triplet_loss(a, near, far))
+    bad = float(triplet_loss(a, far, near))
+    assert good < bad
+    assert float(triplet_loss(a, a, far, margin=0.0)) == pytest.approx(0.0)
+
+
+def test_huber_less_sensitive_to_outliers():
+    pred = jnp.asarray([0.0, 0.0, 0.0, 0.0])
+    t1 = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    t2 = jnp.asarray([0.0, 0.0, 0.0, 30.0])  # one Fig-8-style spike
+    mse_ratio = float(jnp.mean((pred - t2) ** 2) / jnp.mean((pred - t1) ** 2))
+    hub_ratio = float(huber_loss(pred, t2) / huber_loss(pred, t1))
+    assert hub_ratio < mse_ratio  # robustness property the paper relies on
+
+
+def test_consistency_penalizes_close_pairs_with_far_cpi():
+    sig = jnp.asarray(np.tile(np.random.RandomState(0).randn(1, 8), (4, 1)),
+                      jnp.float32)  # all identical signatures
+    cpi_same = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    cpi_diff = jnp.asarray([1.0, 1.0, 20.0, 20.0])
+    assert float(cpi_consistency_loss(sig, cpi_diff)) > \
+        float(cpi_consistency_loss(sig, cpi_same)) + 0.1
+
+
+# ------------------------------------------------------------------ stage 1/2
+
+def test_bbe_is_normalized_and_deterministic():
+    params, _ = bbe_init(jax.random.PRNGKey(0), TINY)
+    toks = np.random.RandomState(0).randint(0, 4, (4, 64, 6)).astype(np.int32)
+    toks[..., 0] = np.random.RandomState(1).randint(4, 40, (4, 64))
+    e1 = encode_bbe(params, TINY, jnp.asarray(toks))
+    e2 = encode_bbe(params, TINY, jnp.asarray(toks))
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(e1), axis=-1), 1.0,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+def test_pretrain_loss_differentiable():
+    params, _ = bbe_init(jax.random.PRNGKey(0), TINY)
+    toks = np.random.RandomState(0).randint(1, 5, (2, 64, 6)).astype(np.int32)
+    g = jax.grad(lambda p: pretrain_loss(p, TINY, jnp.asarray(toks))[0])(
+        params)
+    gnorm = sum(float(jnp.abs(x).sum()) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_signature_order_invariance(seed):
+    """THE core property (paper §III-B-1): permuting the block set must not
+    change the signature."""
+    params, _ = signature_init(jax.random.PRNGKey(0), TINY_SIG)
+    rng = np.random.RandomState(seed)
+    N = TINY_SIG.max_set
+    bbes = rng.randn(1, N, 32).astype(np.float32)
+    freqs = rng.randint(1, 1000, (1, N)).astype(np.float32)
+    mask = np.ones((1, N), bool)
+    perm = rng.permutation(N)
+    s1, c1 = signature_apply(params, TINY_SIG, jnp.asarray(bbes),
+                             jnp.asarray(freqs), jnp.asarray(mask))
+    s2, c2 = signature_apply(params, TINY_SIG, jnp.asarray(bbes[:, perm]),
+                             jnp.asarray(freqs[:, perm]),
+                             jnp.asarray(mask[:, perm]))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-4)
+
+
+def test_signature_respects_padding_mask():
+    params, _ = signature_init(jax.random.PRNGKey(0), TINY_SIG)
+    rng = np.random.RandomState(3)
+    N = TINY_SIG.max_set
+    bbes = rng.randn(1, N, 32).astype(np.float32)
+    freqs = np.abs(rng.randn(1, N)).astype(np.float32)
+    mask = np.zeros((1, N), bool)
+    mask[:, :4] = True
+    garbage = bbes.copy()
+    garbage[:, 4:] = 1e3  # junk in padded region must not matter
+    s1, _ = signature_apply(params, TINY_SIG, jnp.asarray(bbes),
+                            jnp.asarray(freqs), jnp.asarray(mask))
+    s2, _ = signature_apply(params, TINY_SIG, jnp.asarray(garbage),
+                            jnp.asarray(freqs), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+
+def test_frequency_weighting_matters():
+    params, _ = signature_init(jax.random.PRNGKey(0), TINY_SIG)
+    rng = np.random.RandomState(4)
+    N = TINY_SIG.max_set
+    bbes = jnp.asarray(rng.randn(1, N, 32), jnp.float32)
+    mask = jnp.ones((1, N), bool)
+    f1 = np.ones((1, N), np.float32)
+    f2 = np.ones((1, N), np.float32)
+    f2[:, 0] = 1e4  # one dominant block
+    s1, _ = signature_apply(params, TINY_SIG, bbes, jnp.asarray(f1), mask)
+    s2, _ = signature_apply(params, TINY_SIG, bbes, jnp.asarray(f2), mask)
+    assert np.abs(np.asarray(s1) - np.asarray(s2)).max() > 1e-3
+
+
+def test_stage2_loss_runs_and_grads():
+    params, _ = signature_init(jax.random.PRNGKey(0), TINY_SIG)
+    rng = np.random.RandomState(5)
+    N = TINY_SIG.max_set
+
+    def mkset():
+        return {"bbes": jnp.asarray(rng.randn(3, N, 32), jnp.float32),
+                "freqs": jnp.asarray(np.abs(rng.randn(3, N)) * 100,
+                                     jnp.float32),
+                "mask": jnp.ones((3, N), bool)}
+
+    batch = {"anchor": mkset(), "positive": mkset(), "negative": mkset(),
+             "cpi": jnp.asarray([1.0, 3.0, 10.0])}
+    (loss, parts), grads = jax.value_and_grad(
+        lambda p: stage2_loss(p, TINY_SIG, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    assert set(parts) == {"triplet", "cpi_reg", "consistency"}
+    gn = sum(float(jnp.abs(g).sum()) for g in jax.tree_util.tree_leaves(grads))
+    assert gn > 0
+
+
+# ------------------------------------------------------------------ clustering
+
+def test_kmeans_recovers_blobs():
+    rng = np.random.RandomState(0)
+    centers = rng.randn(4, 8) * 10
+    x = np.concatenate([c + rng.randn(50, 8) * 0.3 for c in centers])
+    cents, assign, inertia = kmeans(x.astype(np.float32), 4, seed=1)
+    # each blob should map to exactly one cluster
+    for b in range(4):
+        labels = assign[b * 50:(b + 1) * 50]
+        assert len(set(labels.tolist())) == 1
+    assert inertia < 50 * 4 * 8
+
+
+def test_representatives_are_members():
+    rng = np.random.RandomState(1)
+    x = rng.randn(100, 4).astype(np.float32)
+    cents, assign, _ = kmeans(x, 5, seed=0)
+    reps = representatives(x, cents, assign)
+    for c, r in enumerate(reps):
+        if (assign == c).any():
+            assert assign[r] == c
+
+
+# -------------------------------------------------------------- simpoint/cross
+
+def _toy_phase_data(n_per=30, k=3, d=10, seed=0):
+    """Synthetic program with k phases; CPI correlates with the phase."""
+    rng = np.random.RandomState(seed)
+    sigs, cpis = [], []
+    for ph in range(k):
+        center = rng.randn(d) * 5
+        sigs.append(center + rng.randn(n_per, d) * 0.1)
+        cpis.append(np.full(n_per, 1.0 + 2.0 * ph) + rng.randn(n_per) * 0.02)
+    return np.concatenate(sigs).astype(np.float32), np.concatenate(cpis)
+
+
+def test_simpoint_accuracy_on_clean_phases():
+    sigs, cpis = _toy_phase_data()
+    res = run_simpoint(sigs, cpis, k=3, seed=0)
+    assert res.accuracy > 0.98
+    assert res.weights.sum() == pytest.approx(1.0, abs=1e-6)
+
+
+def test_simpoint_consults_only_representatives():
+    """Estimation must use exactly k representative CPIs."""
+    sigs, cpis = _toy_phase_data()
+    res = run_simpoint(sigs, cpis, k=3, seed=0)
+    est = float((res.weights * cpis[res.rep_indices]).sum())
+    assert est == pytest.approx(res.est_cpi)
+
+
+def test_universal_clustering_cross_program():
+    s1, c1 = _toy_phase_data(seed=1)
+    s2, c2 = _toy_phase_data(seed=1)  # same behavior space, different "program"
+    sigs = np.concatenate([s1, s2])
+    cpis = np.concatenate([c1, c2])
+    pids = ["progA"] * len(c1) + ["progB"] * len(c2)
+    res = universal_clustering(sigs, pids, cpis, k=3, seed=0)
+    assert res.avg_accuracy > 0.97
+    for p in ("progA", "progB"):
+        np.testing.assert_allclose(res.fingerprints[p].sum(), 1.0, atol=1e-6)
+    assert speedup(len(cpis), 3) == pytest.approx(len(cpis) / 3)
+
+
+def test_classic_bbv_matrix_shape():
+    from repro.data.asmgen import gen_program
+    from repro.data.trace import block_table, trace_program
+    p = gen_program(0)
+    bt = block_table([p])
+    order = sorted(bt)
+    lens = {b: blk.num_instrs for b, blk in bt.items()}
+    ivs = trace_program(p, 6)
+    m = classic_bbv_matrix(ivs, order, lens)
+    assert m.shape == (6, len(order))
+    np.testing.assert_allclose(m.sum(1), 1.0, atol=1e-9)

@@ -1,0 +1,124 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.asmgen import OPT_LEVELS, gen_function, gen_program, \
+    spec_programs
+from repro.data.corpus import SyntheticBinaryCorp
+from repro.data.isa import stable_hash
+from repro.data.perfmodel import INORDER_CPU, O3_CPU, _miss_curve, \
+    interval_cpi
+from repro.data.trace import block_table, trace_program
+
+
+def test_function_determinism():
+    a = gen_function(5, "O2").render()
+    b = gen_function(5, "O2").render()
+    assert a == b
+
+
+def test_opt_levels_differ_but_share_structure():
+    f0 = gen_function(9, "O0")
+    f3 = gen_function(9, "O3")
+    assert len(f0.blocks) == len(f3.blocks)  # same skeleton count
+    assert f0.render() != f3.render()        # different lowering
+    # O0 spills: must contain stack traffic
+    assert "[rsp+" in f0.render()
+
+
+def test_o3_unrolls():
+    f1 = gen_function(9, "O1")
+    f3 = gen_function(9, "O3")
+    n1 = sum(b.num_instrs for b in f1.blocks)
+    n3 = sum(b.num_instrs for b in f3.blocks)
+    assert n3 > n1  # partial unroll duplicates bodies
+
+
+def test_trace_interval_budget():
+    p = gen_program(1)
+    ivs = trace_program(p, 5)
+    for iv in ivs:
+        assert 0.5e7 < iv.num_instrs < 1.2e7  # ~10M instructions
+
+
+def test_trace_determinism_and_phases():
+    p = gen_program(2)
+    a = trace_program(p, 12)
+    b = trace_program(p, 12)
+    assert all(x.counts == y.counts for x, y in zip(a, b))
+    assert len({iv.phase_id for iv in a}) > 1  # multiple phases appear
+
+
+def test_bbv_normalized():
+    p = gen_program(3)
+    bt = block_table([p])
+    order = sorted(bt)
+    lens = {b: blk.num_instrs for b, blk in bt.items()}
+    iv = trace_program(p, 1)[0]
+    v = iv.bbv(order, block_lens=lens)
+    assert v.min() >= 0
+    np.testing.assert_allclose(v.sum(), 1.0, atol=1e-9)
+
+
+def test_miss_curve_monotone():
+    cache = 32 << 10
+    xs = np.logspace(2, 8, 30)
+    ys = [_miss_curve(x, cache) for x in xs]
+    assert all(b >= a for a, b in zip(ys, ys[1:]))
+    assert 0 <= min(ys) and max(ys) <= 1
+
+
+def test_cold_start_spike_decays():
+    """Fig 8 behavior: early intervals see cold caches -> CPI decays."""
+    p = spec_programs("int")[2]  # mcf-like pointer chaser
+    bt = block_table([p])
+    cpis = [interval_cpi(iv, bt, O3_CPU) for iv in trace_program(p, 16)]
+    steady = float(np.median(cpis[8:]))
+    assert cpis[0] > 1.25 * steady          # visible cold spike
+    assert cpis[0] > cpis[2] > 0.9 * steady  # decaying toward steady state
+
+
+def test_inorder_slower_than_o3():
+    p = spec_programs("int")[1]
+    bt = block_table([p])
+    ivs = trace_program(p, 10)[4:]  # skip warmup
+    io = np.mean([interval_cpi(iv, bt, INORDER_CPU) for iv in ivs])
+    o3 = np.mean([interval_cpi(iv, bt, O3_CPU) for iv in ivs])
+    assert io > o3  # wide OoO core beats the in-order core
+
+
+@settings(max_examples=15, deadline=None)
+@given(pid=st.integers(0, 500), idx=st.integers(0, 20))
+def test_cpi_positive_and_finite(pid, idx):
+    p = gen_program(pid)
+    bt = block_table([p])
+    ivs = trace_program(p, idx + 1)
+    for cpu in (INORDER_CPU, O3_CPU):
+        c = interval_cpi(ivs[idx], bt, cpu)
+        assert np.isfinite(c) and 0.1 < c < 200
+
+
+def test_corpus_splits_disjoint():
+    corp = SyntheticBinaryCorp(n_functions=100)
+    assert set(corp.train_fids).isdisjoint(corp.test_fids)
+    assert len(corp.train_fids) + len(corp.test_fids) == 100
+
+
+def test_corpus_triplet_semantics():
+    corp = SyntheticBinaryCorp(n_functions=50, max_len=64)
+    b = corp.triplet_batch(0, 8)
+    assert b["anchor"].shape == (8, 64, 6)
+    # anchor and positive must differ (different opt levels)
+    assert not np.array_equal(b["anchor"], b["positive"])
+
+
+def test_corpus_stream_determinism():
+    corp = SyntheticBinaryCorp(n_functions=50, max_len=64)
+    a = corp.pretrain_batch(7, 4)["tokens"]
+    b = corp.pretrain_batch(7, 4)["tokens"]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_stable_hash_stability():
+    assert stable_hash("a", 1) == stable_hash("a", 1)
+    assert stable_hash("a", 1) != stable_hash("a", 2)

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_reference
+from repro.kernels.wkv.ops import wkv_chunked
+from repro.kernels.wkv.ref import wkv_reference
+
+
+def _rand(rng, shape, dtype):
+    x = rng.randn(*shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+# ---------------------------------------------------------------------------
+# wkv
+# ---------------------------------------------------------------------------
+
+WKV_CASES = [
+    # (B, S, H, dh, chunk, dtype)
+    (1, 32, 1, 8, 8, jnp.float32),
+    (2, 64, 3, 16, 16, jnp.float32),
+    (2, 128, 2, 32, 32, jnp.float32),
+    (1, 64, 4, 64, 64, jnp.float32),
+    (2, 64, 2, 16, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,dh,chunk,dtype", WKV_CASES)
+def test_wkv_matches_reference(B, S, H, dh, chunk, dtype):
+    rng = np.random.RandomState(B * 1000 + S)
+    r = _rand(rng, (B, S, H, dh), dtype)
+    k = _rand(rng, (B, S, H, dh), dtype)
+    k = k / jnp.maximum(jnp.linalg.norm(k.astype(jnp.float32), axis=-1,
+                                        keepdims=True), 1e-6).astype(dtype)
+    v = _rand(rng, (B, S, H, dh), dtype)
+    w = jnp.asarray(rng.uniform(0.7, 1.0, (B, S, H, dh)), dtype)
+    beta = jnp.asarray(rng.uniform(0, 1, (B, S, H)), dtype)
+    y_ref, s_ref = wkv_reference(r, k, v, w, beta)
+    y_k, s_k = wkv_chunked(r, k, v, w, beta, chunk=chunk, interpret=True)
+    atol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               atol=atol, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               atol=atol, rtol=1e-3)
+
+
+def test_wkv_state_chaining():
+    """Processing [first half; second half] with carried state must equal
+    one pass — the property decode depends on."""
+    rng = np.random.RandomState(0)
+    B, S, H, dh = 1, 64, 2, 16
+    mk = lambda: _rand(rng, (B, S, H, dh), jnp.float32)  # noqa: E731
+    r, k, v = mk(), mk(), mk()
+    w = jnp.asarray(rng.uniform(0.8, 1.0, (B, S, H, dh)), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0, 1, (B, S, H)), jnp.float32)
+    y_full, s_full = wkv_reference(r, k, v, w, beta)
+    h = S // 2
+    y1, s1 = wkv_chunked(r[:, :h], k[:, :h], v[:, :h], w[:, :h],
+                         beta[:, :h], chunk=16, interpret=True)
+    y2, s2 = wkv_chunked(r[:, h:], k[:, h:], v[:, h:], w[:, h:],
+                         beta[:, h:], state=s1, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.concatenate([y1, y2], 1),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, S, H, K, D, causal, window, bq, bk, dtype)
+    (1, 64, 2, 2, 16, True, 0, 16, 16, jnp.float32),
+    (2, 64, 4, 2, 32, True, 0, 32, 32, jnp.float32),
+    (1, 128, 6, 6, 16, False, 0, 32, 64, jnp.float32),
+    (2, 64, 4, 1, 32, True, 32, 32, 32, jnp.float32),
+    (1, 128, 8, 2, 64, True, 0, 64, 32, jnp.float32),
+    (2, 64, 4, 4, 32, True, 0, 32, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,K,D,causal,window,bq,bk,dtype", FLASH_CASES)
+def test_flash_matches_reference(B, S, H, K, D, causal, window, bq, bk,
+                                 dtype):
+    rng = np.random.RandomState(S + H)
+    q = _rand(rng, (B, S, H, D), dtype)
+    k = _rand(rng, (B, S, K, D), dtype)
+    v = _rand(rng, (B, S, K, D), dtype)
+    ref = attention_reference(q, k, v, causal=causal, window=window)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol,
+                               rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# kmeans assign
+# ---------------------------------------------------------------------------
+
+KM_CASES = [
+    (100, 8, 4, 32, jnp.float32),
+    (1000, 64, 14, 128, jnp.float32),
+    (513, 32, 30, 64, jnp.float32),   # non-divisible N exercises padding
+    (256, 16, 5, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("N,d,K,bn,dtype", KM_CASES)
+def test_kmeans_assign_matches_reference(N, d, K, bn, dtype):
+    rng = np.random.RandomState(N)
+    x = _rand(rng, (N, d), dtype)
+    c = _rand(rng, (K, d), dtype)
+    a_ref, d_ref = kmeans_assign_reference(x, c)
+    a_k, d_k = kmeans_assign(x, c, block_n=bn, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_ref))
+    atol = 1e-3 if dtype == jnp.float32 else 1.0
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref), atol=atol,
+                               rtol=1e-2)

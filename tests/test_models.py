@@ -1,0 +1,177 @@
+"""Per-arch smoke tests (REQUIRED): reduced family-preserving configs, one
+forward/train step on CPU, output shapes + finiteness; decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SHAPES, get_arch, list_archs, scaled_down
+from repro.models import build_model
+
+ALL_ARCHS = [
+    "whisper_tiny", "grok_1_314b", "qwen3_moe_235b_a22b", "qwen3_4b",
+    "qwen2_7b", "granite_3_2b", "smollm_135m", "xlstm_1_3b",
+    "paligemma_3b", "jamba_1_5_large_398b", "semanticbbv_encoder",
+]
+
+
+def _smoke_batch(cfg, B=2, S=16):
+    batch = {"tokens": jnp.ones((B, S), jnp.int32)}
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.ones((B, 8, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision_patches":
+        batch["patches"] = jnp.ones((B, cfg.num_prefix_embeddings,
+                                     cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_forward_and_shapes(arch):
+    cfg = scaled_down(get_arch(arch), num_layers=8 if get_arch(
+        arch).block_pattern else 2)
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    # spec tree mirrors params tree
+    assert jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda _: 0, params)) == \
+        jax.tree_util.tree_structure(jax.tree_util.tree_map(
+            lambda _: 0, specs, is_leaf=lambda x: isinstance(x, tuple)))
+    batch = _smoke_batch(cfg)
+    loss, metrics = model.loss(params, batch, impl="ref")
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    assert float(loss) > 0
+    # logits path
+    hidden, aux = model.prefill(params, batch, impl="ref")
+    B, S = batch["tokens"].shape
+    prefix = cfg.num_prefix_embeddings if cfg.frontend else 0
+    assert hidden.shape == (B, S + prefix, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_train_step(arch):
+    """One optimizer step must change params and keep loss finite."""
+    cfg = scaled_down(get_arch(arch), num_layers=8 if get_arch(
+        arch).block_pattern else 2)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg)
+
+    def loss_fn(p):
+        return model.loss(p, batch, impl="ref")[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    gnorm = float(jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads))))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ["smollm_135m", "xlstm_1_3b",
+                                  "jamba_1_5_large_398b", "whisper_tiny",
+                                  "semanticbbv_encoder"])
+def test_decode_matches_prefill(arch):
+    """Greedy decode step-by-step must reproduce the teacher-forced
+    logits — the strongest single correctness check for the cache path."""
+    import dataclasses
+    cfg = scaled_down(get_arch(arch), num_layers=8 if get_arch(
+        arch).block_pattern else 2)
+    if cfg.moe is not None:
+        # capacity dropping legitimately differs between teacher-forced
+        # grouping and per-token decode; test the cache path dropless
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": tokens}
+    enc_memory = None
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.asarray(rng.randn(B, 8, cfg.d_model),
+                                      jnp.float32)
+    if cfg.frontend == "vision_patches":
+        pytest.skip("prefix-LM decode offset covered separately")
+    from repro.models import transformer as tfm
+    if cfg.encoder_layers:
+        enc_memory = tfm.encoder_apply(params, cfg, batch["frames"],
+                                       impl="ref")
+    logits_tf, _ = tfm.lm_apply(params, cfg, tokens, impl="ref",
+                                enc_memory=enc_memory)
+
+    enc_len = 8 if cfg.encoder_layers else None
+    cache, _ = model.init_cache(B, S, jnp.float32, enc_len=enc_len)
+    if cfg.encoder_layers:
+        # populate cross-attention K/V from encoder memory
+        period = tfm.period_of(cfg)
+        n_periods = cfg.num_layers // period
+        hd = cfg.resolved_head_dim
+        for pos in range(period):
+            lp = params["layers"][f"p{pos}"]
+            ck = jnp.einsum("bsd,ldk->lbsk", enc_memory, lp["cross"]["wk"]
+                            ).reshape(n_periods, B, -1, cfg.num_kv_heads, hd)
+            cv = jnp.einsum("bsd,ldk->lbsk", enc_memory, lp["cross"]["wv"]
+                            ).reshape(n_periods, B, -1, cfg.num_kv_heads, hd)
+            cache[f"p{pos}"]["ck"] = jnp.zeros_like(
+                cache[f"p{pos}"]["ck"]).at[:, :, :ck.shape[2]].set(
+                ck.astype(cache[f"p{pos}"]["ck"].dtype))
+            cache[f"p{pos}"]["cv"] = jnp.zeros_like(
+                cache[f"p{pos}"]["cv"]).at[:, :, :cv.shape[2]].set(
+                cv.astype(cache[f"p{pos}"]["cv"].dtype))
+    errs = []
+    for t in range(S):
+        logits_t, cache = model.decode_step(params, cache,
+                                            tokens[:, t:t + 1],
+                                            jnp.int32(t))
+        errs.append(np.abs(np.asarray(logits_t[:, 0]) -
+                           np.asarray(logits_tf[:, t], np.float32)).max())
+    assert max(errs) < 2e-2, f"{arch}: decode diverges from prefill {errs}"
+
+
+def test_whisper_cross_cache_shape():
+    cfg = scaled_down(get_arch("whisper_tiny"))
+    model = build_model(cfg)
+    cache, specs = model.init_cache(2, 16, jnp.float32)
+    assert "ck" in cache["p0"]
+
+
+def test_moe_aux_loss_positive():
+    cfg = scaled_down(get_arch("qwen3_moe_235b_a22b"), num_layers=2)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(1))
+    _, metrics = model.loss(params, _smoke_batch(cfg), impl="ref")
+    assert float(metrics["aux"]) > 0
+
+
+def test_param_counts_match_nameplate():
+    expect = {
+        "grok_1_314b": (314e9, 0.10),
+        "qwen3_moe_235b_a22b": (235e9, 0.05),
+        "jamba_1_5_large_398b": (398e9, 0.05),
+        "qwen2_7b": (7.6e9, 0.10),
+        "smollm_135m": (135e6, 0.10),
+    }
+    for arch, (n, tol) in expect.items():
+        got = build_model(get_arch(arch)).param_count()
+        assert abs(got - n) / n < tol, f"{arch}: {got/1e9:.1f}B vs {n/1e9}B"
+
+
+def test_active_params_qwen3moe():
+    m = build_model(get_arch("qwen3_moe_235b_a22b"))
+    assert abs(m.active_param_count() - 22e9) / 22e9 < 0.1
+
+
+def test_supports_shape_matrix():
+    long = SHAPES["long_500k"]
+    assert build_model(get_arch("xlstm_1_3b")).supports_shape(long)
+    assert build_model(get_arch("jamba_1_5_large_398b")).supports_shape(long)
+    for dense in ("qwen2_7b", "smollm_135m", "grok_1_314b", "whisper_tiny"):
+        assert not build_model(get_arch(dense)).supports_shape(long)
+    assert build_model(get_arch("qwen2_7b")).supports_shape(SHAPES["train_4k"])
+
+
+def test_list_archs_contains_all_assigned():
+    archs = list_archs()
+    for a in ALL_ARCHS:
+        assert a in archs

@@ -1,0 +1,47 @@
+"""Serving engine behavior."""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_arch, scaled_down
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = scaled_down(get_arch("smollm_135m"), num_layers=2, d_model=32,
+                      num_heads=2, d_ff=64, vocab_size=64)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_completes_all_requests(served):
+    cfg, model, params = served
+    eng = ServeEngine(model, params, num_slots=2, max_seq=32)
+    for i in range(5):  # more requests than slots -> queueing
+        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3], max_new=4))
+    done = eng.run()
+    assert set(done) == set(range(5))
+    for r in done.values():
+        assert len(r.out) == 4
+        assert all(0 <= t < cfg.vocab_size for t in r.out)
+
+
+def test_greedy_decode_deterministic(served):
+    cfg, model, params = served
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(model, params, num_slots=1, max_seq=32)
+        eng.submit(Request(rid=0, prompt=[5, 6], max_new=6))
+        outs.append(tuple(eng.run()[0].out))
+    assert outs[0] == outs[1]
+
+
+def test_engine_respects_max_seq(served):
+    cfg, model, params = served
+    eng = ServeEngine(model, params, num_slots=1, max_seq=8)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=100))
+    done = eng.run()
+    assert len(done[0].out) < 100  # truncated by the sequence budget

@@ -1,0 +1,95 @@
+"""Recurrent mixers: chunkwise-parallel forms vs sequential oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import (
+    _mlstm_chunkwise, _mlstm_scan, mamba_apply, mamba_decode,
+    mamba_init, mamba_init_state, mlstm_apply, mlstm_decode, mlstm_init,
+    mlstm_init_state,
+)
+
+
+def _gates(rng, B, S, H):
+    i_pre = jnp.asarray(rng.randn(B, S, H) * 2, jnp.float32)
+    f_pre = jnp.asarray(
+        np.log(1 / (1 + np.exp(-(rng.randn(B, S, H) + 3)))), jnp.float32)
+    return i_pre, f_pre
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_mlstm_chunkwise_equals_sequential(chunk):
+    """H1's chunkwise reformulation must be EXACTLY the stabilized
+    sequential recurrence (EXPERIMENTS.md §Perf H1)."""
+    rng = np.random.RandomState(0)
+    B, S, H, dh = 2, 64, 3, 16
+    q = jnp.asarray(rng.randn(B, S, H, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, H, dh) * dh ** -0.5, jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, H, dh), jnp.float32)
+    i_pre, f_pre = _gates(rng, B, S, H)
+    ref = np.asarray(_mlstm_scan(q, k, v, i_pre, f_pre))
+    out = np.asarray(_mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk=chunk))
+    rel = np.abs(out - ref) / (np.abs(ref) + 1e-3)
+    assert rel.max() < 1e-3
+
+
+def test_mlstm_chunkwise_grads_close():
+    rng = np.random.RandomState(1)
+    B, S, H, dh = 1, 32, 2, 8
+    q = jnp.asarray(rng.randn(B, S, H, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, H, dh) * dh ** -0.5, jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, H, dh), jnp.float32)
+    i_pre, f_pre = _gates(rng, B, S, H)
+    g_ref = jax.grad(lambda q: (_mlstm_scan(q, k, v, i_pre, f_pre) ** 2
+                                ).sum())(q)
+    g_chk = jax.grad(lambda q: (_mlstm_chunkwise(q, k, v, i_pre, f_pre, 8)
+                                ** 2).sum())(q)
+    rel = np.abs(np.asarray(g_ref - g_chk)) / (np.abs(np.asarray(g_ref))
+                                               + 1e-2)
+    assert np.quantile(rel, 0.99) < 1e-3
+
+
+def test_mlstm_apply_decode_chain():
+    """Full-block apply == step-by-step decode with carried state."""
+    rng = np.random.RandomState(2)
+    d_model, H, S, B = 32, 2, 12, 2
+    params, _ = mlstm_init(jax.random.PRNGKey(0), d_model, H, 4, jnp.float32)
+    x = jnp.asarray(rng.randn(B, S, d_model), jnp.float32)
+    full = mlstm_apply(params, x, H, impl="scan")
+    state = mlstm_init_state(B, d_model, H, 4)
+    outs = []
+    for t in range(S):
+        o, state = mlstm_decode(params, x[:, t:t + 1], state, H)
+        outs.append(o)
+    step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               atol=2e-4)
+
+
+def test_mamba_apply_decode_chain():
+    rng = np.random.RandomState(3)
+    d_model, DS, S, B = 16, 4, 10, 2
+    params, _ = mamba_init(jax.random.PRNGKey(0), d_model, DS, 4,
+                           jnp.float32)
+    x = jnp.asarray(rng.randn(B, S, d_model), jnp.float32)
+    full = mamba_apply(params, x, DS, chunk=5)
+    state = mamba_init_state(B, d_model, DS, 4)
+    outs = []
+    for t in range(S):
+        o, state = mamba_decode(params, x[:, t:t + 1], state, DS)
+        outs.append(o)
+    step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               atol=2e-4)
+
+
+def test_mamba_chunk_invariance():
+    rng = np.random.RandomState(4)
+    d_model, DS, S, B = 16, 4, 16, 1
+    params, _ = mamba_init(jax.random.PRNGKey(1), d_model, DS, 4,
+                           jnp.float32)
+    x = jnp.asarray(rng.randn(B, S, d_model), jnp.float32)
+    a = mamba_apply(params, x, DS, chunk=4)
+    b = mamba_apply(params, x, DS, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,85 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tokenizer import (
+    ATYPES, FLAGS, ITYPES, MultiDimTokenizer, NUM_DIMS, OTYPES, RTYPES,
+    default_tokenizer,
+)
+from repro.data.asmgen import OPT_LEVELS, gen_function
+from repro.data.isa import BasicBlock, Instruction, OPCODES, Operand
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+def test_dimension_sizes(tok):
+    assert len(tok.spec.dim_sizes) == NUM_DIMS
+    assert tok.spec.dim_sizes[1] == len(ITYPES)
+    assert tok.spec.dim_sizes[2] == len(OTYPES)
+    assert tok.spec.dim_sizes[3] == len(RTYPES)
+    assert tok.spec.dim_sizes[4] == len(ATYPES)
+    assert tok.spec.dim_sizes[5] == len(FLAGS)
+
+
+def test_imm_normalization(tok):
+    """Any immediate value maps to the same IMM token (no OOV)."""
+    rows1 = tok.encode_instruction(
+        Instruction("add", (Operand("reg", reg="rax"),
+                            Operand("imm", value=42))))
+    rows2 = tok.encode_instruction(
+        Instruction("add", (Operand("reg", reg="rax"),
+                            Operand("imm", value=999999))))
+    assert rows1 == rows2
+
+
+def test_memory_operand_is_single_token(tok):
+    """[rsp+IMM] must be ONE composite token carrying its base register."""
+    ins = Instruction("mov", (Operand("reg", reg="rax"),
+                              Operand("mem", reg="rsp", value=8)))
+    rows = tok.encode_instruction(ins)
+    assert len(rows) == 3  # opcode, dst reg, ONE mem token
+    mem_row = rows[2]
+    assert tok.asm_vocab[mem_row[0]] == "[rsp+IMM]"
+    assert RTYPES[mem_row[3]] == "sp"  # implicit rsp dependency preserved
+
+
+def test_block_encoding_shape_and_padding(tok):
+    f = gen_function(3, "O1")
+    enc = tok.encode_block(f.blocks[0], max_len=128)
+    assert enc.shape == (128, NUM_DIMS)
+    n = int(tok.lengths(enc[None])[0])
+    assert 0 < n <= 128
+    assert (enc[n:] == 0).all()  # pad rows are all-zero
+
+
+def test_deterministic(tok):
+    f1 = gen_function(17, "O2")
+    f2 = gen_function(17, "O2")
+    e1 = tok.encode_blocks(f1.blocks)
+    e2 = tok.encode_blocks(f2.blocks)
+    np.testing.assert_array_equal(e1, e2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(fid=st.integers(0, 10_000), level=st.sampled_from(OPT_LEVELS))
+def test_all_ids_in_range(fid, level):
+    tok = default_tokenizer()
+    f = gen_function(fid, level)
+    enc = tok.encode_blocks(f.blocks, max_len=96)
+    for d, size in enumerate(tok.spec.dim_sizes):
+        assert enc[..., d].min() >= 0
+        assert enc[..., d].max() < size, f"dim {d} out of range"
+
+
+@settings(max_examples=20, deadline=None)
+@given(fid=st.integers(0, 10_000))
+def test_no_unk_for_generated_code(fid):
+    """The generator's entire output must tokenize without [UNK]."""
+    tok = default_tokenizer()
+    unk = tok.asm_index["[UNK]"]
+    for lvl in ("O0", "O3"):
+        enc = tok.encode_blocks(gen_function(fid, lvl).blocks)
+        assert not (enc[..., 0] == unk).any()

@@ -1,0 +1,225 @@
+"""Trainer: convergence, exact-resume checkpointing, preemption restart,
+optimizer math, gradient compression."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig, get_arch, scaled_down
+from repro.data.isa import stable_hash
+from repro.models import build_model
+from repro.train.checkpoint import (
+    latest_checkpoint, restore_checkpoint, save_checkpoint,
+)
+from repro.train.compression import compress_tree, decompress_tree
+from repro.train.fault_tolerance import run_with_restarts
+from repro.train.optimizer import (
+    adamw_init, adamw_update, adafactor_init, adafactor_update,
+    global_norm_clip, lr_schedule,
+)
+from repro.train.trainer import Trainer
+
+
+def _tiny_model():
+    cfg = scaled_down(get_arch("smollm_135m"), num_layers=2, d_model=32,
+                      num_heads=2, d_ff=64, vocab_size=128)
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, specs
+
+
+def _batch_fn(vocab, batch=4, seq=16):
+    """Low-entropy stream (16 of `vocab` symbols) so there is signal to
+    learn: loss should move from ~ln(vocab) toward ~ln(16)."""
+    def fn(step):
+        r = np.random.RandomState(stable_hash("tb", step))
+        return {"tokens": jnp.asarray(r.randint(0, 16, (batch, seq)),
+                                      jnp.int32)}
+    return fn
+
+
+def test_training_reduces_loss(tmp_path):
+    cfg, model, params, specs = _tiny_model()
+    tc = TrainConfig(learning_rate=5e-3, total_steps=30, warmup_steps=2,
+                     checkpoint_every=0, checkpoint_dir=str(tmp_path))
+    tr = Trainer(lambda p, b: model.loss(p, b, impl="ref"), params, specs, tc)
+    bf = _batch_fn(cfg.vocab_size)
+    first = tr.step(bf(0))["loss"]
+    last = None
+    for s in range(1, 30):
+        last = tr.step(bf(s))["loss"]
+    assert last < first - 0.3, f"no learning: {first} -> {last}"
+
+
+def test_checkpoint_exact_resume(tmp_path):
+    """Branch A: run 10 steps straight. Branch B: run 5, checkpoint,
+    restore into a fresh trainer, run 5 more. Params must match exactly
+    (bitwise determinism of the restart path)."""
+    cfg, model, params, specs = _tiny_model()
+    bf = _batch_fn(cfg.vocab_size)
+
+    def mk(ckdir, every):
+        p, s = build_model(cfg).init(jax.random.PRNGKey(0))
+        tc = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=2,
+                         checkpoint_every=every, checkpoint_dir=ckdir)
+        return Trainer(lambda pp, b: model.loss(pp, b, impl="ref"), p, s, tc)
+
+    ta = mk(str(tmp_path / "a"), 0)
+    for s in range(10):
+        ta.step(bf(s))
+
+    tb1 = mk(str(tmp_path / "b"), 5)
+    tb1.fit(bf, 5, log_every=1000)
+    tb1.maybe_checkpoint(force=True)
+    tb2 = mk(str(tmp_path / "b"), 5)
+    tb2.fit(bf, 10, log_every=1000)
+
+    fa = jax.tree_util.tree_leaves(ta.state.params)
+    fb = jax.tree_util.tree_leaves(tb2.state.params)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_atomic_and_pruning(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    for step in (1, 2, 3, 4):
+        save_checkpoint(str(tmp_path), step, tree, keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2 and kept[-1].endswith("4")
+    path = latest_checkpoint(str(tmp_path))
+    restored, step, _ = restore_checkpoint(path, tree)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16  # bf16 roundtrip
+
+
+def test_preemption_checkpoint_and_restart(tmp_path):
+    """SIGTERM-equivalent: trainer flags preemption, checkpoints, exits 42;
+    the in-process supervisor restarts; training completes."""
+    cfg, model, params, specs = _tiny_model()
+    bf = _batch_fn(cfg.vocab_size)
+    calls = {"n": 0}
+
+    def job():
+        p, s = build_model(cfg).init(jax.random.PRNGKey(0))
+        tc = TrainConfig(learning_rate=1e-3, total_steps=8, warmup_steps=1,
+                         checkpoint_every=2, checkpoint_dir=str(tmp_path))
+        tr = Trainer(lambda pp, b: model.loss(pp, b, impl="ref"), p, s, tc)
+        calls["n"] += 1
+        if calls["n"] == 1:
+            # simulate SIGTERM mid-run on the first attempt
+            tr.restore()
+            for s_ in range(4):
+                tr.step(bf(tr.state.step))
+                tr.maybe_checkpoint()
+            tr._preempted = True
+            tr.maybe_checkpoint()  # raises SystemExit(42)
+        else:
+            tr.fit(bf, 8, log_every=1000)
+            assert tr.state.step == 8
+
+    restarts = run_with_restarts(job, max_restarts=2)
+    assert restarts == 1 and calls["n"] == 2
+
+
+def test_elastic_restore_different_structure_dtype(tmp_path):
+    """Checkpoint saved in fp32 restores into a bf16 template (elastic /
+    precision-change restart)."""
+    tree32 = {"w": jnp.ones((4, 4), jnp.float32) * 1.5}
+    save_checkpoint(str(tmp_path), 1, tree32)
+    template = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    restored, _, _ = restore_checkpoint(latest_checkpoint(str(tmp_path)),
+                                        template)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(restored["w"], np.float32), 1.5)
+
+
+# ----------------------------------------------------------------- optimizers
+
+def test_adamw_matches_reference_math():
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    st = adamw_init(p)
+    new_p, st = adamw_update(g, st, p, lr=0.1, b1=0.9, b2=0.95,
+                             weight_decay=0.0)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.05 * np.asarray(g["w"]) ** 2
+    step = (m / (1 - 0.9)) / (np.sqrt(v / (1 - 0.95)) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray(p["w"]) - 0.1 * step, rtol=1e-5)
+
+
+def test_adafactor_factored_memory():
+    p = {"w": jnp.zeros((64, 128), jnp.float32),
+         "b": jnp.zeros((64,), jnp.float32)}
+    st = adafactor_init(p)
+    # factored: no full-size fp32 second moment for matrices
+    assert st["slots"]["w"]["vr"].shape == (64,)
+    assert st["slots"]["w"]["vc"].shape == (128,)
+    assert st["slots"]["b"]["v"].shape == (64,)
+
+
+def test_adafactor_descends():
+    p = {"w": jnp.asarray(np.random.RandomState(0).randn(32, 32),
+                          jnp.float32)}
+    st = adafactor_init(p)
+
+    def loss(w):
+        return jnp.sum(jnp.square(w))
+
+    for i in range(20):
+        g = {"w": jax.grad(loss)(p["w"])}
+        p, st = adafactor_update(g, st, p, lr=0.05)
+    assert float(loss(p["w"])) < float(loss(jnp.asarray(
+        np.random.RandomState(0).randn(32, 32), jnp.float32))) * 0.7
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = global_norm_clip(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_lr_schedule_shape():
+    assert float(lr_schedule(jnp.asarray(0), base_lr=1.0, warmup_steps=10,
+                             total_steps=100)) < 0.2
+    peak = float(lr_schedule(jnp.asarray(10), base_lr=1.0, warmup_steps=10,
+                             total_steps=100))
+    end = float(lr_schedule(jnp.asarray(100), base_lr=1.0, warmup_steps=10,
+                            total_steps=100))
+    assert peak > 0.9 and end < 0.2
+
+
+# ---------------------------------------------------------------- compression
+
+def test_int8_error_feedback_unbiased_over_time():
+    """With error feedback, the ACCUMULATED quantized stream converges to
+    the accumulated true stream (bias cancels)."""
+    rng = np.random.RandomState(0)
+    true_sum = np.zeros(256, np.float32)
+    q_sum = np.zeros(256, np.float32)
+    err = {"g": jnp.zeros(256, jnp.float32)}
+    for t in range(50):
+        g = {"g": jnp.asarray(rng.randn(256) * (1 + t % 3), jnp.float32)}
+        qs, scales, err = compress_tree(g, err)
+        deq = decompress_tree(qs, scales)
+        true_sum += np.asarray(g["g"])
+        q_sum += np.asarray(deq["g"])
+    denom = np.abs(true_sum).mean()
+    assert np.abs(q_sum - true_sum).mean() / denom < 0.02
+
+
+def test_int8_compress_range():
+    g = {"g": jnp.asarray(np.random.RandomState(1).randn(100) * 37,
+                          jnp.float32)}
+    qs, scales, _ = compress_tree(g, None)
+    q = np.asarray(qs["g"])
+    assert q.dtype == np.int8 and np.abs(q).max() <= 127
+    rec = np.asarray(decompress_tree(qs, scales)["g"])
+    assert np.abs(rec - np.asarray(g["g"])).max() <= float(scales["g"]) * 0.51
