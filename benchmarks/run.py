@@ -18,6 +18,7 @@ def main() -> None:
     import benchmarks.fig6_crossprogram as fig6
     import benchmarks.fig7_adaptation as fig7
     import benchmarks.framework_throughput as thr
+    import benchmarks.set_attention_kernel as setattn
     import benchmarks.table1_embedding_params as t1
     import benchmarks.table2_bcsd as t2
 
@@ -28,6 +29,7 @@ def main() -> None:
         "fig6": fig6.run,
         "fig7": fig7.run,
         "throughput": thr.run,
+        "set_attn": setattn.run,
     }
     want = [a for a in sys.argv[1:] if a in suites] or list(suites)
     for name in want:

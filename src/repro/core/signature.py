@@ -57,13 +57,17 @@ def signature_init(key, cfg: SignatureConfig):
     return params, specs
 
 
-def signature_apply(params, cfg: SignatureConfig, bbes, freqs, mask):
+def signature_apply(params, cfg: SignatureConfig, bbes, freqs, mask,
+                    impl: str = "xla"):
     """bbes: (B, N, bbe_dim); freqs: (B, N) execution counts; mask: (B, N).
+
+    impl: attention backend, "xla" | "pallas" | "pallas_interpret"
+    (see repro/kernels/__init__.py); training requires "xla".
 
     Returns (signature (B, sig_dim) L2-normalized, cpi_pred (B,) log1p-CPI)."""
     sig = set_transformer_apply(params["set_transformer"], bbes,
                                 num_heads=cfg.num_heads, weights=freqs,
-                                mask=mask)
+                                mask=mask, impl=impl)
     sig = l2_normalize(sig)
     h = params["cpi_head"]
     z = jnp.tanh(sig @ h["w1"].astype(sig.dtype) + h["b1"].astype(sig.dtype))
@@ -71,24 +75,27 @@ def signature_apply(params, cfg: SignatureConfig, bbes, freqs, mask):
     return sig, cpi
 
 
-def stage2_loss(params, cfg: SignatureConfig, batch):
+def stage2_loss(params, cfg: SignatureConfig, batch, impl: str = "xla"):
     """batch: anchor/positive/negative interval sets + anchor CPI.
 
-    Each interval set: {bbes (B,N,D), freqs (B,N), mask (B,N)}; 'cpi' (B,)."""
+    Each interval set: {bbes (B,N,D), freqs (B,N), mask (B,N)}; 'cpi' (B,).
+    Differentiating this loss requires impl="xla" until the set-attention
+    kernel grows a custom VJP (ROADMAP open item)."""
     a_sig, a_cpi = signature_apply(params, cfg, batch["anchor"]["bbes"],
                                    batch["anchor"]["freqs"],
-                                   batch["anchor"]["mask"])
+                                   batch["anchor"]["mask"], impl)
     p_sig, _ = signature_apply(params, cfg, batch["positive"]["bbes"],
                                batch["positive"]["freqs"],
-                               batch["positive"]["mask"])
+                               batch["positive"]["mask"], impl)
     n_sig, _ = signature_apply(params, cfg, batch["negative"]["bbes"],
                                batch["negative"]["freqs"],
-                               batch["negative"]["mask"])
+                               batch["negative"]["mask"], impl)
     return combined_stage2_loss(a_sig, p_sig, n_sig, a_cpi, batch["cpi"],
                                 w_r=cfg.w_r, w_c=cfg.w_c)
 
 
-def predict_cpi(params, cfg: SignatureConfig, bbes, freqs, mask):
+def predict_cpi(params, cfg: SignatureConfig, bbes, freqs, mask,
+                impl: str = "xla"):
     """Inverse-transformed CPI prediction."""
-    _, logcpi = signature_apply(params, cfg, bbes, freqs, mask)
+    _, logcpi = signature_apply(params, cfg, bbes, freqs, mask, impl)
     return jnp.expm1(logcpi)

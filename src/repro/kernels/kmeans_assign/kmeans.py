@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams as _CompilerParams
+
 
 def _kmeans_kernel(x_ref, c_ref, a_ref, d_ref):
     x = x_ref[...].astype(jnp.float32)                      # (Bn, d)
@@ -58,6 +60,6 @@ def kmeans_assign_pallas(x, centroids, *, block_n: int = 1024,
             jax.ShapeDtypeStruct((N,), jnp.float32),
         ),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
     )(x, centroids)

@@ -1,0 +1,2 @@
+from repro.kernels.set_attention.ops import masked_set_attention
+from repro.kernels.set_attention.ref import set_attention_reference

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for fused masked, frequency-weighted set attention.
+
+The SAB/PMA hot op of the Stage-2 Set Transformer:
+
+    softmax_M( q·kᵀ/√dh + key_bias − ∞·(1 − key_mask) ) · v
+
+key_bias carries the normalized log-execution-frequency of each set
+element (paper Fig. 1 bottom); key_mask flags real vs padded elements.
+All math in fp32, output cast back to q.dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def set_attention_reference(q, k, v, key_bias=None, key_mask=None):
+    """q: (B,H,N,dh); k,v: (B,H,M,dh); key_bias: (B,M) additive logit
+    bias; key_mask: (B,M) valid flags. Returns (B,H,N,dh) in q.dtype."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhnd,bhmd->bhnm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    if key_bias is not None:
+        s = s + key_bias.astype(jnp.float32)[:, None, None, :]
+    if key_mask is not None:
+        s = s + jnp.where(key_mask, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhnm,bhmd->bhnd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,74 @@
+"""Fused masked set-attention Pallas TPU kernel (Stage-2 SAB/PMA hot op).
+
+One program per (batch row, head): interval sets are small (max_set ≲ a
+few hundred), so unlike flash attention there is no need to stream keys —
+the full (N, M) score matrix stays resident in VMEM and QKᵀ, the
+log-frequency key bias, the padding mask, the softmax, and PV all fuse
+into a single kernel. The XLA path materializes the (B, H, N, M) score
+and probability tensors in HBM between each of those five steps; here
+they never leave the core.
+
+The mask is folded into one additive fp32 bias per key (ops.py): 0 for
+valid keys, NEG_INF for user-masked keys (same additive collapse the
+jnp reference performs, so even fully-masked rows agree bitwise), and
+2·NEG_INF for tile-padding keys so they underflow to zero weight below
+either tier.
+
+Grid: (B, H). Blocks:
+  q:    (1, 1, N, dh) VMEM tile         k/v: (1, 1, M, dh)
+  bias: (1, M) fp32, shared across heads (index_map drops h)
+  o:    (1, 1, N, dh) output tile
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import CompilerParams as _CompilerParams
+
+NEG_INF = -2.0 ** 30
+
+
+def _set_attn_kernel(q_ref, k_ref, v_ref, b_ref, o_ref, *, scale: float):
+    q = q_ref[0, 0].astype(jnp.float32)                       # (N, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                       # (M, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = s + b_ref[0][None, :]                                 # (N, M) VMEM
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def set_attention_pallas(q, k, v, key_bias, *, interpret: bool = False):
+    """q: (B,H,N,dh); k,v: (B,H,M,dh); key_bias: (B,M) fp32 combined
+    frequency-bias + mask + padding bias.
+
+    Shapes must already be tile-aligned (ops.py pads); returns
+    (B,H,N,dh) in q.dtype."""
+    B, H, N, dh = q.shape
+    M = k.shape[2]
+    qkv_tile = lambda b, h: (b, h, 0, 0)  # noqa: E731
+    return pl.pallas_call(
+        functools.partial(_set_attn_kernel, scale=dh ** -0.5),
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, N, dh), qkv_tile),
+            pl.BlockSpec((1, 1, M, dh), qkv_tile),
+            pl.BlockSpec((1, 1, M, dh), qkv_tile),
+            pl.BlockSpec((1, M), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, N, dh), qkv_tile),
+        out_shape=jax.ShapeDtypeStruct((B, H, N, dh), q.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(q, k, v, key_bias)

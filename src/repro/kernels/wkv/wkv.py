@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams as _CompilerParams
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, b_ref, s0_ref,
                 y_ref, sf_ref, s_scratch, *, chunk: int):
@@ -88,6 +90,6 @@ def wkv_pallas(r, k, v, w, beta, state, *, chunk: int = 128,
         out_shape=out_shapes,
         scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(r, k, v, w, beta, state)

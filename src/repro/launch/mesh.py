@@ -9,6 +9,16 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # axis_types / jax.sharding.AxisType only exist on newer jax; older
+    # versions default every axis to Auto anyway
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod mesh: 16×16 (256 chips) per pod; 2 pods = 512 chips.
 
@@ -17,13 +27,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     there)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever devices exist (tests / single host): 1D data mesh."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return _make_mesh((n,), ("data",))

@@ -255,22 +255,29 @@ def attn_decode(params, x, cache_k, cache_v, pos, *, num_heads: int,
                 num_kv_heads: int, head_dim: int,
                 rope_theta: float = 10000.0, use_rope: bool = True,
                 qk_norm: bool = False, window: int = 0):
-    """x: (B, 1, d); cache_k/v: (B, T, K, D); pos: scalar current position.
+    """x: (B, 1, d); cache_k/v: (B, T, K, D); pos: scalar shared position
+    or (B,) per-row positions (continuous batching: rows refilled mid-run
+    restart at 0 and must neither see nor clobber other rows' history).
 
     Returns (out (B,1,d), new_cache_k, new_cache_v).
     """
     B = x.shape[0]
     T = cache_k.shape[1]
-    positions = jnp.full((B, 1), pos)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
+    positions = pos[:, None]                        # (B, 1) for RoPE
     q, k, v = _project_qkv(params, x, x, num_heads, num_kv_heads, head_dim,
                            positions, positions, qk_norm, rope_theta, use_rope)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    rows = jnp.arange(B)
+    cache_k = cache_k.at[rows, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[rows, pos].set(v[:, 0].astype(cache_v.dtype))
     kv_pos = jnp.arange(T)
-    valid = kv_pos <= pos
+    valid = kv_pos[None, :] <= pos[:, None]         # (B, T)
     if window > 0:
-        valid = valid & (pos - kv_pos < window)
-    bias = jnp.where(valid, 0.0, NEG_INF)[None, :]  # (1, T)
-    out = _ref_attention(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), bias)
+        valid = valid & (pos[:, None] - kv_pos[None, :] < window)
+    bias = jnp.zeros((1, T), jnp.float32)
+    out = _ref_attention(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+                         bias, kv_valid=valid)
     out = out.reshape(B, 1, num_heads * head_dim)
     return out @ params["wo"].astype(out.dtype), cache_k, cache_v

@@ -37,21 +37,34 @@ def _mha_init(key, d: int, num_heads: int, dtype):
     return params, specs
 
 
-def _mha_apply(params, xq, xk, num_heads: int, key_bias=None, key_mask=None):
-    """xq: (B,N,d), xk: (B,M,d). key_bias: (B,M) additive logit bias."""
+def _mha_apply(params, xq, xk, num_heads: int, key_bias=None, key_mask=None,
+               impl: str = "xla"):
+    """xq: (B,N,d), xk: (B,M,d). key_bias: (B,M) additive logit bias.
+
+    impl: "xla" (pure jnp) | "pallas" | "pallas_interpret" — the fused
+    kernel in repro/kernels/set_attention (same convention as the RWKV
+    timemix path)."""
     B, N, d = xq.shape
     M = xk.shape[1]
     dh = d // num_heads
     q = (xq @ params["wq"].astype(xq.dtype)).reshape(B, N, num_heads, dh)
     k = (xk @ params["wk"].astype(xq.dtype)).reshape(B, M, num_heads, dh)
     v = (xk @ params["wv"].astype(xq.dtype)).reshape(B, M, num_heads, dh)
-    s = jnp.einsum("bnhd,bmhd->bhnm", q, k).astype(jnp.float32) * (dh ** -0.5)
-    if key_bias is not None:
-        s = s + key_bias[:, None, None, :]
-    if key_mask is not None:
-        s = s + jnp.where(key_mask, 0.0, NEG_INF)[:, None, None, :]
-    p = jax.nn.softmax(s, axis=-1).astype(xq.dtype)
-    o = jnp.einsum("bhnm,bmhd->bnhd", p, v).reshape(B, N, d)
+    if impl == "pallas" or impl == "pallas_interpret":
+        from repro.kernels.set_attention.ops import masked_set_attention
+        o = masked_set_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), key_bias=key_bias, key_mask=key_mask,
+            interpret=(impl == "pallas_interpret"))
+        o = o.transpose(0, 2, 1, 3).reshape(B, N, d)
+    else:
+        s = jnp.einsum("bnhd,bmhd->bhnm", q, k).astype(jnp.float32) * (dh ** -0.5)
+        if key_bias is not None:
+            s = s + key_bias[:, None, None, :]
+        if key_mask is not None:
+            s = s + jnp.where(key_mask, 0.0, NEG_INF)[:, None, None, :]
+        p = jax.nn.softmax(s, axis=-1).astype(xq.dtype)
+        o = jnp.einsum("bhnm,bmhd->bnhd", p, v).reshape(B, N, d)
     return o @ params["wo"].astype(xq.dtype)
 
 
@@ -69,10 +82,11 @@ def _mab_init(key, d: int, num_heads: int, d_ff: int, dtype):
              "norm2": n2_s})
 
 
-def _mab_apply(params, xq, xk, num_heads: int, key_bias=None, key_mask=None):
+def _mab_apply(params, xq, xk, num_heads: int, key_bias=None, key_mask=None,
+               impl: str = "xla"):
     h = layernorm_apply(params["norm1"],
                         xq + _mha_apply(params["mha"], xq, xk, num_heads,
-                                        key_bias, key_mask))
+                                        key_bias, key_mask, impl))
     ff = dense_apply(params["ff2"], jax.nn.gelu(dense_apply(params["ff1"], h)))
     return layernorm_apply(params["norm2"], h + ff)
 
@@ -105,9 +119,14 @@ def set_transformer_init(key, d_in: int, d_model: int, d_out: int,
 
 def set_transformer_apply(params, x, *, num_heads: int = 4,
                           weights: Optional[jnp.ndarray] = None,
-                          mask: Optional[jnp.ndarray] = None):
+                          mask: Optional[jnp.ndarray] = None,
+                          impl: str = "xla"):
     """x: (B, N, d_in) set elements; weights: (B, N) nonneg frequencies;
-    mask: (B, N) valid flags. Returns (B, d_out) signature."""
+    mask: (B, N) valid flags. Returns (B, d_out) signature.
+
+    impl selects the attention backend ("xla" | "pallas" |
+    "pallas_interpret"); gradients currently require "xla" (the fused
+    kernel has no backward pass yet)."""
     B, N, _ = x.shape
     key_bias = None
     if weights is not None:
@@ -119,9 +138,9 @@ def set_transformer_apply(params, x, *, num_heads: int = 4,
                             axis=-1)
     h = dense_apply(params["in_proj"], x)
     for sab in params["sabs"]:
-        h = _mab_apply(sab, h, h, num_heads, key_bias, mask)
+        h = _mab_apply(sab, h, h, num_heads, key_bias, mask, impl)
     seeds = jnp.broadcast_to(params["seeds"][None], (B,) + params["seeds"].shape)
     pooled = _mab_apply(params["pma"], seeds.astype(h.dtype), h, num_heads,
-                        key_bias, mask)
+                        key_bias, mask, impl)
     pooled = pooled.reshape(B, -1)
     return dense_apply(params["out_proj"], pooled)

@@ -492,9 +492,14 @@ def _block_decode(params, cfg: ModelConfig, kind: str, x, cache, pos):
 
 
 def lm_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
-    """One decode step. tokens: (B,1) int32; pos: scalar int32 position.
+    """One decode step. tokens: (B,1) int32; pos: scalar int32 position
+    shared by the batch, or (B,) int32 per-row positions (continuous
+    batching with mid-run slot refills).
 
     Returns (logits (B,1,V) fp32, new cache)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.full((tokens.shape[0],), pos, jnp.int32)
     dtype = jnp.dtype(cfg.dtype)
     x = embed_apply(params["embed"], tokens).astype(dtype)
     x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)

@@ -1,17 +1,18 @@
 """Batched serving engine: continuous-batching-lite decode over a fixed
-slot pool with per-slot positions and KV/state cache.
+slot pool with true per-slot positions and KV/state cache.
 
 The engine keeps `num_slots` concurrent sequences. Each call to
 `step_all()` decodes one token for every active slot with a single jitted
-decode step (per-slot positions via vmap-style masking is unnecessary:
-slots share one `pos` array and attention masks derive from it). Finished
-or empty slots are refilled from the request queue — arrivals never force
-a recompile because shapes are static.
+decode step that takes a (num_slots,) position vector — so a slot
+refilled mid-run restarts at position 0 with a zeroed cache row and can
+neither attend to nor overwrite the previous occupant's KV/state.
+Finished or empty slots are refilled from the request queue — arrivals
+never force a recompile because shapes are static.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,42 +30,63 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, num_slots: int = 8,
                  max_seq: int = 512, temperature: float = 0.0,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, seed: int = 0):
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.temperature = temperature
         self.cache, _ = model.init_cache(num_slots, max_seq, cache_dtype)
-        self.pos = np.zeros(num_slots, np.int32)       # next write position
+        self.pos = np.zeros(num_slots, np.int32)       # per-slot next write
         self.active: List[Optional[Request]] = [None] * num_slots
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
         self._last_tok = np.zeros((num_slots, 1), np.int32)
-        # NOTE: the current decode step shares one scalar `pos` across the
-        # batch (standard static-shape decode); per-slot positions are
-        # emulated by slot-synchronous refill (all slots advance together).
+        self._pending_prompt: Dict[int, List[int]] = {}
+        self._rng = np.random.RandomState(seed)
         self._decode = jax.jit(model.decode_step)
 
     def submit(self, req: Request):
         req.out = []
         self.queue.append(req)
 
+    def _reset_slots(self, slots: List[int]):
+        """Zero the given slots across the whole KV/state cache pytree in
+        ONE pass (batch is axis 1 of every leaf, after the stacked-layer
+        axis) — a per-slot loop would copy the full cache per refill."""
+        idx = np.asarray(slots)
+        self.cache = jax.tree_util.tree_map(lambda c: c.at[:, idx].set(0),
+                                            self.cache)
+
     def _refill(self):
+        filled = []
         for s in range(self.num_slots):
             if self.active[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[s] = req
+                self.pos[s] = 0
+                self._last_tok[s, 0] = 0
+                filled.append(s)
                 # teacher-forced prompt consumption, one token at a time
                 # (prefill path is Model.prefill; slot-wise decode keeps the
                 # engine simple for the CPU demo)
-                self._pending_prompt = getattr(self, "_pending_prompt", {})
                 self._pending_prompt[s] = list(req.prompt)
+        if filled:
+            self._reset_slots(filled)
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        """logits: (num_slots, V) -> next token per slot. Greedy at
+        temperature 0, else Gumbel-max (vectorized exact categorical)."""
+        if self.temperature <= 0:
+            return logits.argmax(-1)
+        u = self._rng.uniform(1e-12, 1.0, size=logits.shape)
+        g = -np.log(-np.log(u))
+        return (logits / self.temperature + g).argmax(-1)
 
     def step_all(self) -> int:
         """One decode step for all slots; returns #active slots."""
         self._refill()
-        pending = getattr(self, "_pending_prompt", {})
+        pending = self._pending_prompt
         n_active = sum(r is not None for r in self.active)
         if n_active == 0:
             return 0
@@ -77,22 +99,14 @@ class ServeEngine:
                 toks[s, 0] = pending[s].pop(0)
             else:
                 toks[s, 0] = self._last_tok[s, 0]
-        pos = int(self.pos.max())
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(toks),
-                                          jnp.int32(pos))
-        logits = np.asarray(logits)[:, 0]
-        if self.temperature > 0:
-            z = logits / self.temperature
-            z = z - z.max(-1, keepdims=True)
-            p = np.exp(z) / np.exp(z).sum(-1, keepdims=True)
-            nxt = np.array([np.random.choice(len(pi), p=pi) for pi in p])
-        else:
-            nxt = logits.argmax(-1)
-        self.pos += 1
+                                          jnp.asarray(self.pos))
+        nxt = self._sample(np.asarray(logits)[:, 0])
         for s, req in enumerate(self.active):
             if req is None:
                 continue
+            self.pos[s] += 1
             if pending.get(s):
                 continue  # still consuming prompt
             req.out.append(int(nxt[s]))

@@ -12,8 +12,15 @@ from repro.distributed.sharding import (
     LOGICAL_RULES, logical_to_pspec, prune_pspec,
 )
 
-MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-SINGLE = AbstractMesh((16, 16), ("data", "model"))
+def _mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)            # jax >= 0.5 signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # jax 0.4.x signature
+
+
+MESH = _mesh((2, 16, 16), ("pod", "data", "model"))
+SINGLE = _mesh((16, 16), ("data", "model"))
 
 
 def test_logical_rules_basic():

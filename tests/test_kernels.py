@@ -8,6 +8,8 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_reference
 from repro.kernels.kmeans_assign.ops import kmeans_assign
 from repro.kernels.kmeans_assign.ref import kmeans_assign_reference
+from repro.kernels.set_attention.ops import masked_set_attention
+from repro.kernels.set_attention.ref import set_attention_reference
 from repro.kernels.wkv.ops import wkv_chunked
 from repro.kernels.wkv.ref import wkv_reference
 
@@ -66,8 +68,9 @@ def test_wkv_state_chaining():
     y2, s2 = wkv_chunked(r[:, h:], k[:, h:], v[:, h:], w[:, h:],
                          beta[:, h:], state=s1, chunk=16, interpret=True)
     np.testing.assert_allclose(np.concatenate([y1, y2], 1),
-                               np.asarray(y_full), atol=1e-4)
-    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+                               np.asarray(y_full), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4,
+                               rtol=1e-3)
 
 
 # ---------------------------------------------------------------------------
@@ -99,6 +102,107 @@ def test_flash_matches_reference(B, S, H, K, D, causal, window, bq, bk,
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), atol=atol,
                                rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# set attention (Stage-2 SAB/PMA)
+# ---------------------------------------------------------------------------
+
+SET_ATTN_CASES = [
+    # (B, H, N, M, dh, weighted, masked, dtype)
+    (1, 2, 16, 16, 16, False, False, jnp.float32),
+    (2, 4, 64, 64, 64, True, True, jnp.float32),    # SAB at paper scale
+    (2, 2, 1, 64, 32, True, True, jnp.float32),     # PMA: one seed query
+    (2, 2, 5, 13, 16, True, True, jnp.float32),     # non-divisible sizes
+    (1, 3, 17, 33, 8, False, True, jnp.float32),
+    (2, 2, 7, 130, 16, True, False, jnp.float32),   # M > one lane tile
+    (2, 2, 32, 32, 32, True, True, jnp.bfloat16),
+]
+
+
+def _set_attn_inputs(rng, B, H, N, M, dh, weighted, masked, dtype):
+    q = _rand(rng, (B, H, N, dh), dtype)
+    k = _rand(rng, (B, H, M, dh), dtype)
+    v = _rand(rng, (B, H, M, dh), dtype)
+    bias = (jnp.asarray(rng.uniform(0, 1, (B, M)), jnp.float32)
+            if weighted else None)
+    mask = None
+    if masked:
+        m = rng.rand(B, M) > 0.3
+        m[:, 0] = True  # at least one valid key per row
+        mask = jnp.asarray(m)
+    return q, k, v, bias, mask
+
+
+@pytest.mark.parametrize("B,H,N,M,dh,weighted,masked,dtype", SET_ATTN_CASES)
+def test_set_attention_matches_reference(B, H, N, M, dh, weighted, masked,
+                                         dtype):
+    rng = np.random.RandomState(31 * N + M)
+    q, k, v, bias, mask = _set_attn_inputs(rng, B, H, N, M, dh, weighted,
+                                           masked, dtype)
+    ref = set_attention_reference(q, k, v, bias, mask)
+    out = masked_set_attention(q, k, v, bias, mask, interpret=True)
+    atol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol,
+                               rtol=1e-3)
+
+
+def test_set_transformer_impl_parity():
+    """Full Stage-2 model: XLA vs fused-kernel interpret path must agree,
+    weights + mask engaged (the exact configuration the pipeline runs)."""
+    from repro.models.set_transformer import (
+        set_transformer_apply, set_transformer_init,
+    )
+    rng = np.random.RandomState(0)
+    B, N, d_in = 3, 23, 16
+    params, _ = set_transformer_init(jax.random.PRNGKey(1), d_in=d_in + 1,
+                                     d_model=32, d_out=16, num_heads=4)
+    x = jnp.asarray(rng.randn(B, N, d_in), jnp.float32)
+    w = jnp.asarray(rng.uniform(1, 100, (B, N)), jnp.float32)
+    m = rng.rand(B, N) > 0.2
+    m[:, 0] = True
+    m = jnp.asarray(m)
+    y_xla = set_transformer_apply(params, x, num_heads=4, weights=w, mask=m,
+                                  impl="xla")
+    y_pal = set_transformer_apply(params, x, num_heads=4, weights=w, mask=m,
+                                  impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_xla),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_set_attention_fully_masked_rows_match_reference():
+    """Rows with NO valid keys (empty interval sets) must still agree
+    with the jnp reference — both collapse to the same fp32-rounded
+    uniform softmax over the M real keys, padding excluded."""
+    rng = np.random.RandomState(3)
+    B, H, N, M, dh = 3, 2, 8, 21, 16
+    q, k, v, bias, _ = _set_attn_inputs(rng, B, H, N, M, dh, True, False,
+                                        jnp.float32)
+    m = rng.rand(B, M) > 0.3
+    m[1, :] = False  # one batch row entirely masked
+    mask = jnp.asarray(m)
+    ref = set_attention_reference(q, k, v, bias, mask)
+    out = masked_set_attention(q, k, v, bias, mask, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-3)
+
+
+def test_set_attention_padding_independence():
+    """Results must not depend on the wrapper's tile padding: growing M
+    with masked-out keys leaves the output unchanged."""
+    rng = np.random.RandomState(7)
+    q, k, v, bias, mask = _set_attn_inputs(rng, 2, 2, 9, 21, 16, True, True,
+                                           jnp.float32)
+    out = masked_set_attention(q, k, v, bias, mask, interpret=True)
+    pad = 40
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                 constant_values=3.0)  # garbage keys, masked off
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)), constant_values=5.0)
+    bp = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=9.0)
+    mp = jnp.pad(mask, ((0, 0), (0, pad)))
+    out_p = masked_set_attention(q, kp, vp, bp, mp, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out), atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -39,6 +39,34 @@ def test_greedy_decode_deterministic(served):
     assert outs[0] == outs[1]
 
 
+def test_refilled_slot_isolated_from_previous_request(served):
+    """A request decoded in a refilled slot must produce exactly what a
+    fresh engine produces — the refill resets the slot's position and
+    cache, so the previous occupant's KV can't leak into attention."""
+    cfg, model, params = served
+    eng = ServeEngine(model, params, num_slots=1, max_seq=32)
+    eng.submit(Request(rid=0, prompt=[7, 8, 9], max_new=5))
+    eng.submit(Request(rid=1, prompt=[3, 4], max_new=5))
+    done = eng.run()
+    fresh = ServeEngine(model, params, num_slots=1, max_seq=32)
+    fresh.submit(Request(rid=1, prompt=[3, 4], max_new=5))
+    ref = fresh.run()
+    assert done[1].out == ref[1].out
+
+
+def test_temperature_sampling_vectorized(served):
+    cfg, model, params = served
+    eng = ServeEngine(model, params, num_slots=2, max_seq=32,
+                      temperature=1.0, seed=7)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2], max_new=6))
+    done = eng.run()
+    assert set(done) == {0, 1, 2}
+    for r in done.values():
+        assert len(r.out) == 6
+        assert all(0 <= t < cfg.vocab_size for t in r.out)
+
+
 def test_engine_respects_max_seq(served):
     cfg, model, params = served
     eng = ServeEngine(model, params, num_slots=1, max_seq=8)

@@ -92,6 +92,31 @@ def test_cross_program_workflow(world):
     assert res.avg_accuracy > 0.3  # untrained signature: structure only
 
 
+def test_vectorized_batch_sets_matches_loop(world):
+    """The vectorized gather path must be bit-identical to the per-interval
+    loop it replaced (stable top-max_set ordering, tie-breaking included)."""
+    from repro.core.pipeline import BBEIndex
+    progs, bt, per_prog, cpis, pipe = world
+    table = pipe.encode_blocks(list(bt.values()))
+    ivs = [iv for p in progs for iv in per_prog[p.name]]
+    ref = pipe._batch_sets_looped(ivs, table)
+    vec = pipe._batch_sets(ivs, BBEIndex(table))
+    for r, v, name in zip(ref, vec, ("bbes", "freqs", "mask")):
+        assert r.dtype == v.dtype, name
+        np.testing.assert_array_equal(v, r, err_msg=name)
+
+
+def test_encode_blocks_cache_consistent(world):
+    """Cached (second-call) BBEs are identical to freshly encoded ones."""
+    progs, bt, per_prog, cpis, pipe = world
+    blocks = list(bt.values())
+    t1 = pipe.encode_blocks(blocks)
+    t2 = pipe.encode_blocks(blocks)          # fully cache-served
+    assert set(t1) == set(t2)
+    for bid in t1:
+        np.testing.assert_array_equal(t2[bid], t1[bid])
+
+
 def test_bbv_baseline_matches_interface(world):
     progs, bt, per_prog, cpis, pipe = world
     order = sorted(bt)
