@@ -6,11 +6,19 @@ BinaryCorp. Stage 2: triplet + CPI(Huber) + consistency co-training on
 intervals traced from the SPEC-int-like programs with the in-order
 gem5-proxy as ground truth (exactly the paper's §III pipeline, scaled to
 one CPU core).
+
+Stage-2 training (and §IV-D adaptation) runs through the shared
+`Stage2Engine` (repro.train.stage2): the distributed Trainer drives the
+loss over row-id triplet batches, so this module keeps only the world /
+corpus setup and the triplet selection policy. Stage 1 keeps the local
+`_train` loop — its losses take raw token batches and need none of the
+Trainer machinery.
 """
 from __future__ import annotations
 
 import os
 import pickle
+import tempfile
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -18,11 +26,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.config import TrainConfig
 from repro.core.bbe import (
     BBEConfig, bbe_init, encode_bbe, finetune_triplet_loss, pretrain_loss,
 )
 from repro.core.pipeline import SemanticBBVPipeline
-from repro.core.signature import SignatureConfig, signature_init, stage2_loss
+from repro.core.signature import (
+    SignatureConfig, signature_init, signature_specs,
+)
 from repro.core.tokenizer import default_tokenizer
 from repro.data.asmgen import spec_programs
 from repro.data.corpus import SyntheticBinaryCorp
@@ -30,6 +41,7 @@ from repro.data.isa import stable_hash
 from repro.data.perfmodel import CPUModel, INORDER_CPU, interval_cpi
 from repro.data.trace import block_table, trace_program
 from repro.train.optimizer import adamw_init, adamw_update, lr_schedule
+from repro.train.stage2 import Stage2Engine, triplet_row_batch
 from repro.utils.log import get_logger
 
 log = get_logger("repro.lab")
@@ -128,14 +140,15 @@ def get_world(which="int", n_intervals=N_INTERVALS,
 # ---------------------------------------------------------------------------
 
 
-def _stage2_batch(world: World, bbe_table, pipe: SemanticBBVPipeline,
-                  cpu_name: str, step: int, batch: int,
-                  programs: Optional[List[str]] = None,
-                  fraction: float = 1.0):
-    """Anchor/positive = same program & phase; negative = other program."""
+def _stage2_triplets(world: World, cpu_name: str, step: int, batch: int,
+                     programs: Optional[List[str]] = None,
+                     fraction: float = 1.0):
+    """Triplet selection policy (anchor/positive = same program & phase;
+    negative = other program) — integer work only; set assembly is the
+    vectorized row-id path in `_stage2_batch`."""
     rng = np.random.RandomState(stable_hash("s2", cpu_name, step))
     names = programs or [p.name for p in world.programs]
-    mk = {k: [] for k in ("anchor", "positive", "negative")}
+    sets = {k: [] for k in ("anchor", "positive", "negative")}
     cpis = []
     limit = max(4, int(N_INTERVALS * fraction))
     for _ in range(batch):
@@ -149,17 +162,44 @@ def _stage2_batch(world: World, bbe_table, pipe: SemanticBBVPipeline,
         ip = int(rng.choice(phases[ph]))
         ivn = world.intervals[pn][:limit]
         inn = int(rng.randint(len(ivn)))
-        mk["anchor"].append(pipe.interval_set(ivs[ia], bbe_table))
-        mk["positive"].append(pipe.interval_set(ivs[ip], bbe_table))
-        mk["negative"].append(pipe.interval_set(ivn[inn], bbe_table))
+        sets["anchor"].append(ivs[ia])
+        sets["positive"].append(ivs[ip])
+        sets["negative"].append(ivn[inn])
         cpis.append(world.cpi[(cpu_name, pa)][ia])
-    out = {}
-    for k, sets in mk.items():
-        out[k] = {"bbes": jnp.asarray(np.stack([s[0] for s in sets])),
-                  "freqs": jnp.asarray(np.stack([s[1] for s in sets])),
-                  "mask": jnp.asarray(np.stack([s[2] for s in sets]))}
-    out["cpi"] = jnp.asarray(np.array(cpis), jnp.float32)
-    return out
+    return sets, cpis
+
+
+def _stage2_batch(world: World, index, pipe: SemanticBBVPipeline,
+                  cpu_name: str, step: int, batch: int,
+                  programs: Optional[List[str]] = None,
+                  fraction: float = 1.0):
+    """Row-id triplet batch: selection policy + one vectorized
+    `batch_set_ids` pass per role — the dense (B, N, bbe_dim) gathers
+    happen on-device inside the engine's jitted train step."""
+    sets, cpis = _stage2_triplets(world, cpu_name, step, batch,
+                                  programs=programs, fraction=fraction)
+    return triplet_row_batch(sets, cpis, index, pipe.sig_cfg.max_set)
+
+
+def _stage2_engine(pipe: SemanticBBVPipeline, sig_params, sig_specs,
+                   bbe_table, steps: int, lr: float, tag: str):
+    """Shared-Trainer Stage-2 engine over `pipe`'s uploaded BBE matrix.
+
+    Checkpointing is off for the lab's short in-process runs, and the
+    checkpoint dir is freshly created per call (mkdtemp under the tag):
+    Trainer.fit() restores unconditionally, so a REUSED dir with stale
+    checkpoints would silently resume — or skip training entirely —
+    instead of retraining. Long adaptation sweeps that flip
+    checkpoint_every on still land in their own per-run dir."""
+    index, matrix = pipe._table_index(bbe_table)
+    os.makedirs(ART, exist_ok=True)
+    ckdir = tempfile.mkdtemp(prefix=f"ckpt_{tag}_", dir=ART)
+    tc = TrainConfig(learning_rate=lr, total_steps=steps,
+                     warmup_steps=max(2, steps // 20), weight_decay=0.01,
+                     checkpoint_every=0, checkpoint_dir=ckdir)
+    engine = Stage2Engine(SIG_CFG, sig_params, sig_specs, matrix, tc,
+                          impl=pipe.impl)
+    return engine, index
 
 
 def get_pipeline(force=False) -> Tuple[SemanticBBVPipeline, World]:
@@ -174,22 +214,21 @@ def get_pipeline(force=False) -> Tuple[SemanticBBVPipeline, World]:
                                    blob["bbe"], blob["sig"])
         return pipe, world
     s1 = get_stage1(force=force)
-    sig_params, _ = signature_init(jax.random.PRNGKey(1), SIG_CFG)
+    sig_params, sig_specs = signature_init(jax.random.PRNGKey(1), SIG_CFG)
     pipe = SemanticBBVPipeline(default_tokenizer(), BBE_CFG, SIG_CFG,
                                s1["params"], sig_params)
     log.info("Encoding %d unique blocks...", len(world.block_tbl))
     bbe_table = pipe.encode_blocks(list(world.block_tbl.values()))
 
     log.info("Stage-2 co-training (triplet + CPI + consistency)...")
-    sig_params, _ = _train(
-        lambda p, b: stage2_loss(p, SIG_CFG, b),
-        sig_params,
-        lambda s: _stage2_batch(world, bbe_table, pipe, INORDER_CPU.name,
-                                s, 12),
-        steps=200, lr=1e-3, tag="stage2")
-    pipe.sig_params = sig_params
+    engine, index = _stage2_engine(pipe, sig_params, sig_specs, bbe_table,
+                                   steps=200, lr=1e-3, tag="stage2")
+    engine.fit(lambda s: _stage2_batch(world, index, pipe,
+                                       INORDER_CPU.name, s, 12),
+               num_steps=200, log_every=40)
+    pipe.sig_params = engine.params
     with open(path, "wb") as f:
-        pickle.dump({"bbe": pipe.bbe_params, "sig": sig_params}, f)
+        pickle.dump({"bbe": pipe.bbe_params, "sig": pipe.sig_params}, f)
     return pipe, world
 
 
@@ -197,18 +236,21 @@ def fine_tune_for_cpu(pipe: SemanticBBVPipeline, world: World,
                       cpu: CPUModel, programs: List[str],
                       fraction: float = 0.2, steps: int = 500):
     """§IV-D adaptation: fine-tune Stage 2 (+ CPI head) on a small sample
-    of a NEW microarchitecture from only `programs`.
+    of a NEW microarchitecture from only `programs`, through the shared
+    Trainer-backed `Stage2Engine`.
 
     steps=120/lr=5e-4 measurably underfit (predictions landed midway
     between the in-order and O3 CPI regimes, flat ~2.5); 500 steps at
     1.5e-3 crosses the regime shift — the adapted data is still only
     `fraction` of two programs, faithful to §IV-D."""
     bbe_table = pipe.encode_blocks(list(world.block_tbl.values()))
-    sig_params, _ = _train(
-        lambda p, b: stage2_loss(p, SIG_CFG, b),
-        pipe.sig_params,
-        lambda s: _stage2_batch(world, bbe_table, pipe, cpu.name, s, 12,
-                                programs=programs, fraction=fraction),
-        steps=steps, lr=1.5e-3, tag=f"adapt-{cpu.name}")
+    engine, index = _stage2_engine(pipe, pipe.sig_params,
+                                   signature_specs(SIG_CFG),
+                                   bbe_table, steps=steps, lr=1.5e-3,
+                                   tag=f"adapt_{cpu.name}")
+    engine.fit(lambda s: _stage2_batch(world, index, pipe, cpu.name, s, 12,
+                                       programs=programs,
+                                       fraction=fraction),
+               num_steps=steps, log_every=100)
     return SemanticBBVPipeline(pipe.tok, pipe.bbe_cfg, pipe.sig_cfg,
-                               pipe.bbe_params, sig_params)
+                               pipe.bbe_params, engine.params)

@@ -112,6 +112,47 @@ def _topk_order(seg: np.ndarray, cnts: np.ndarray) -> np.ndarray:
     return np.lexsort((-cnts, seg))
 
 
+def batch_set_ids(intervals, index: BBEIndex, max_set: int):
+    """Vectorized interval-set assembly WITHOUT the BBE payload: one
+    stable sort selects each interval's top-`max_set` blocks by count
+    (same order and tie-breaking as the per-interval loop), one lookup
+    maps bids to matrix rows. Shared by inference batching (pipeline)
+    and Stage-2 training batches (repro.train.stage2).
+
+    Returns (row_ids (B,N) int32 — `index.sentinel` in empty slots,
+    freqs (B,N) f32, mask (B,N) bool)."""
+    B = len(intervals)
+    N = max_set
+    row_ids = np.full((B, N), index.sentinel, np.int32)
+    freqs = np.zeros((B, N), np.float32)
+    mask = np.zeros((B, N), bool)
+    lens = np.fromiter((len(iv.counts) for iv in intervals), np.int64,
+                       count=B)
+    total = int(lens.sum())
+    if total == 0:
+        return row_ids, freqs, mask
+    bids = np.empty(total, np.int64)
+    cnts = np.empty(total, np.float64)
+    off = 0
+    for iv in intervals:
+        c = iv.counts
+        n = len(c)
+        bids[off:off + n] = np.fromiter(c.keys(), np.int64, count=n)
+        cnts[off:off + n] = np.fromiter(c.values(), np.float64, count=n)
+        off += n
+    seg = np.repeat(np.arange(B), lens)
+    order = _topk_order(seg, cnts)
+    starts = np.concatenate(([0], np.cumsum(lens)[:-1]))
+    pos = np.arange(total) - np.repeat(starts, lens)
+    keep = pos < N
+    rows = index.rows(bids[order][keep])
+    b_idx, n_idx = seg[keep], pos[keep]   # seg[order] == seg (grouped)
+    row_ids[b_idx, n_idx] = rows
+    freqs[b_idx, n_idx] = cnts[order][keep]
+    mask[b_idx, n_idx] = True
+    return row_ids, freqs, mask
+
+
 def _signature_from_rows(params, cfg, matrix, row_ids, freqs, mask,
                          impl="xla"):
     """Device-side set assembly: gather BBE rows inside jit so the host
@@ -237,43 +278,8 @@ class SemanticBBVPipeline:
         return bbes, freqs, mask
 
     def _batch_set_ids(self, intervals, index: BBEIndex):
-        """Vectorized interval-set assembly WITHOUT the BBE payload:
-        one stable sort selects each interval's top-`max_set` blocks by
-        count (same order and tie-breaking as the per-interval loop),
-        one lookup maps bids to matrix rows.
-
-        Returns (row_ids (B,N) int32 — `index.sentinel` in empty slots,
-        freqs (B,N) f32, mask (B,N) bool)."""
-        B = len(intervals)
-        N = self.sig_cfg.max_set
-        row_ids = np.full((B, N), index.sentinel, np.int32)
-        freqs = np.zeros((B, N), np.float32)
-        mask = np.zeros((B, N), bool)
-        lens = np.fromiter((len(iv.counts) for iv in intervals), np.int64,
-                           count=B)
-        total = int(lens.sum())
-        if total == 0:
-            return row_ids, freqs, mask
-        bids = np.empty(total, np.int64)
-        cnts = np.empty(total, np.float64)
-        off = 0
-        for iv in intervals:
-            c = iv.counts
-            n = len(c)
-            bids[off:off + n] = np.fromiter(c.keys(), np.int64, count=n)
-            cnts[off:off + n] = np.fromiter(c.values(), np.float64, count=n)
-            off += n
-        seg = np.repeat(np.arange(B), lens)
-        order = _topk_order(seg, cnts)
-        starts = np.concatenate(([0], np.cumsum(lens)[:-1]))
-        pos = np.arange(total) - np.repeat(starts, lens)
-        keep = pos < N
-        rows = index.rows(bids[order][keep])
-        b_idx, n_idx = seg[keep], pos[keep]   # seg[order] == seg (grouped)
-        row_ids[b_idx, n_idx] = rows
-        freqs[b_idx, n_idx] = cnts[order][keep]
-        mask[b_idx, n_idx] = True
-        return row_ids, freqs, mask
+        """Module-level `batch_set_ids` bound to this pipeline's max_set."""
+        return batch_set_ids(intervals, index, self.sig_cfg.max_set)
 
     def _batch_sets(self, intervals, index: BBEIndex):
         """Dense (bbes (B,N,D), freqs, mask) batch — `_batch_set_ids`

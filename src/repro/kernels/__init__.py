@@ -11,7 +11,8 @@
 # take impl="xla" | "pallas" | "pallas_interpret".
 #   "xla"              — pure-jnp path (ref math), runs anywhere, autodiff ok
 #   "pallas"           — compiled TPU kernel (forward only unless the family
-#                        defines a custom VJP)
+#                        defines a custom VJP; set_attention does — its fused
+#                        backward makes Stage-2 training impl="pallas" clean)
 #   "pallas_interpret" — same kernel via the Pallas interpreter; slow but
 #                        runs on CPU, used by parity tests and benchmarks
 # The flag is threaded as a static argument (baked into jax.jit partials),

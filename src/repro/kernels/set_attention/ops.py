@@ -1,5 +1,11 @@
 """jit'd wrapper: pads set sizes to TPU tiles, folds bias+mask+padding
-into the kernel's single additive key bias."""
+into the kernel's single additive key bias.
+
+Fully differentiable: the kernel carries a custom VJP (set_attn.py), and
+the padding/slicing here is plain jnp, so `jax.grad` through
+`masked_set_attention` runs the fused backward kernel. Cotangents of
+padded key slots are sliced away; `key_bias` receives its true gradient
+(summed over heads and queries); the boolean `key_mask` is non-diff."""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -125,8 +125,9 @@ def set_transformer_apply(params, x, *, num_heads: int = 4,
     mask: (B, N) valid flags. Returns (B, d_out) signature.
 
     impl selects the attention backend ("xla" | "pallas" |
-    "pallas_interpret"); gradients currently require "xla" (the fused
-    kernel has no backward pass yet)."""
+    "pallas_interpret"); all three differentiate — the fused kernel has
+    a custom VJP (flash-style recompute backward), so Stage-2 training
+    can run the Pallas path end to end."""
     B, N, _ = x.shape
     key_bias = None
     if weights is not None:

@@ -8,10 +8,21 @@ refilled mid-run restarts at position 0 with a zeroed cache row and can
 neither attend to nor overwrite the previous occupant's KV/state.
 Finished or empty slots are refilled from the request queue — arrivals
 never force a recompile because shapes are static.
+
+Prefill: newly filled slots consume their whole prompt in ONE jitted
+call (`_prefill`): a lax.scan over the padded prompt drives the same
+per-slot decode step, with a per-slot validity mask selecting which
+slots' cache rows, positions, and logits advance at each scan step — so
+slots mid-generation and shorter prompts in the same batch are untouched
+beyond their length, and the result is step-for-step identical to the
+token-by-token decode path (parity-tested). Prompt lengths are padded to
+power-of-two buckets so the number of distinct compiles is O(log
+max_prompt) rather than one per length.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional
 
 import jax
@@ -30,12 +41,14 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, num_slots: int = 8,
                  max_seq: int = 512, temperature: float = 0.0,
-                 cache_dtype=jnp.float32, seed: int = 0):
+                 cache_dtype=jnp.float32, seed: int = 0,
+                 use_prefill: bool = True):
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.temperature = temperature
+        self.use_prefill = use_prefill
         self.cache, _ = model.init_cache(num_slots, max_seq, cache_dtype)
         self.pos = np.zeros(num_slots, np.int32)       # per-slot next write
         self.active: List[Optional[Request]] = [None] * num_slots
@@ -45,6 +58,8 @@ class ServeEngine:
         self._pending_prompt: Dict[int, List[int]] = {}
         self._rng = np.random.RandomState(seed)
         self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(functools.partial(
+            _prefill_scan, model.decode_step, model.cfg.vocab_size))
 
     def submit(self, req: Request):
         req.out = []
@@ -67,12 +82,50 @@ class ServeEngine:
                 self.pos[s] = 0
                 self._last_tok[s, 0] = 0
                 filled.append(s)
-                # teacher-forced prompt consumption, one token at a time
-                # (prefill path is Model.prefill; slot-wise decode keeps the
-                # engine simple for the CPU demo)
                 self._pending_prompt[s] = list(req.prompt)
         if filled:
             self._reset_slots(filled)
+            if self.use_prefill:
+                self._prefill_slots(filled)
+
+    def _prefill_slots(self, filled: List[int]):
+        """Consume the pending prompts of `filled` in one jitted call.
+
+        Other slots ride along with lens=0: the scan's validity mask
+        keeps their cache rows, positions, and logits untouched. The
+        last valid logits per slot yield the first generated token —
+        exactly what the token-by-token path samples after consuming the
+        final prompt token."""
+        lens = np.zeros(self.num_slots, np.int32)
+        for s in filled:
+            lens[s] = len(self._pending_prompt[s])
+        longest = int(lens.max())
+        if longest == 0:
+            return
+        bucket = 1 << (longest - 1).bit_length()       # power-of-two pad
+        toks = np.zeros((self.num_slots, bucket), np.int32)
+        for s in filled:
+            toks[s, :lens[s]] = self._pending_prompt[s]
+        # .copy(): jnp.asarray zero-copies aligned numpy buffers on CPU,
+        # so handing the live self.pos to the async dispatch and then
+        # mutating it below would race (the scan can read the updated
+        # positions). The decode path is safe only because it forces the
+        # logits before touching self.pos; don't rely on that here.
+        last_logits, self.cache = self._prefill(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(self.pos.copy()))
+        self.pos += lens
+        nxt = self._sample(np.asarray(last_logits))
+        for s in filled:
+            if lens[s] == 0:
+                continue
+            self._pending_prompt[s] = []
+            req = self.active[s]
+            req.out.append(int(nxt[s]))
+            self._last_tok[s, 0] = nxt[s]
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_seq - 1:
+                self.done[req.rid] = req
+                self.active[s] = None
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
         """logits: (num_slots, V) -> next token per slot. Greedy at
@@ -122,3 +175,37 @@ class ServeEngine:
             self.step_all()
             steps += 1
         return self.done
+
+
+def _prefill_scan(decode_step, vocab_size: int, params, cache, toks, lens,
+                  pos):
+    """Scan the decode step over a padded prompt batch.
+
+    toks: (B, L) padded prompts; lens: (B,) valid lengths (0 = slot not
+    prefilling); pos: (B,) each slot's current write position. Returns
+    (last valid logits (B, V) fp32, updated cache). Steps at t >=
+    lens[b] leave slot b's cache row, position, and logits unchanged, so
+    idle and mid-generation slots are bit-identical before and after."""
+    B = toks.shape[0]
+
+    def body(carry, xs):
+        cache, pos, last = carry
+        tok_t, t = xs
+        logits, new_cache = decode_step(params, cache, tok_t[:, None], pos)
+        valid = t < lens                                     # (B,)
+
+        def merge(n, o):
+            m = valid.reshape((1, B) + (1,) * (n.ndim - 2))
+            return jnp.where(m, n, o)
+
+        cache = jax.tree_util.tree_map(merge, new_cache, cache)
+        last = jnp.where(valid[:, None],
+                         logits[:, 0].astype(jnp.float32), last)
+        pos = jnp.where(valid, pos + 1, pos)
+        return (cache, pos, last), None
+
+    last0 = jnp.zeros((B, vocab_size), jnp.float32)
+    (cache, _, last), _ = jax.lax.scan(
+        body, (cache, pos, last0),
+        (toks.T, jnp.arange(toks.shape[1])))
+    return last, cache

@@ -5,4 +5,5 @@ from repro.train.optimizer import (
 from repro.train.checkpoint import save_checkpoint, restore_checkpoint, \
     latest_checkpoint
 from repro.train.trainer import Trainer, TrainState
+from repro.train.stage2 import Stage2Engine, triplet_row_batch
 from repro.train.compression import int8_ef_compress, int8_ef_decompress

@@ -67,6 +67,66 @@ def test_temperature_sampling_vectorized(served):
         assert all(0 <= t < cfg.vocab_size for t in r.out)
 
 
+def test_prefill_matches_tokenwise_decode(served):
+    """The batched one-call prefill must reproduce the token-by-token
+    prompt consumption exactly — across ragged prompt lengths, queueing,
+    and mid-run slot refills."""
+    cfg, model, params = served
+    outs = {}
+    for pf in (True, False):
+        eng = ServeEngine(model, params, num_slots=2, max_seq=32,
+                          use_prefill=pf)
+        for i in range(5):
+            eng.submit(Request(rid=i, prompt=[1 + i, 2, 3] + [4] * i,
+                               max_new=5))
+        outs[pf] = {r: tuple(req.out) for r, req in eng.run().items()}
+    assert outs[True] == outs[False]
+
+
+def test_prefill_scan_logits_and_riding_slot_isolation(served):
+    """Direct check of the jitted prefill step: (a) last-token logits and
+    cache equal sequential decode_step calls; (b) a slot riding along
+    with lens=0 keeps its cache row, position, and prior state
+    bit-identical."""
+    import functools
+
+    import jax.numpy as jnp
+
+    from repro.serve.engine import _prefill_scan
+
+    cfg, model, params = served
+    B, prompt = 2, [5, 6, 7]
+    cache, _ = model.init_cache(B, 32, jnp.float32)
+    dec = jax.jit(model.decode_step)
+    # slot 1 first decodes two tokens of its own (mid-generation state)
+    pos = jnp.asarray([0, 0], jnp.int32)
+    for t in (9, 10):
+        _, cache = dec(params, cache, jnp.asarray([[0], [t]], jnp.int32),
+                       pos)
+        pos = pos + 1
+    cache = jax.tree_util.tree_map(lambda c: c.at[:, 0].set(0), cache)
+    start = jnp.asarray([0, 2], jnp.int32)
+    # sequential truth: slot 0 consumes the prompt, slot 1 untouched
+    c_seq, p_seq = cache, start
+    for t in prompt:
+        logits, c_new = dec(params, c_seq, jnp.asarray([[t], [0]],
+                                                       jnp.int32), p_seq)
+        c_seq = jax.tree_util.tree_map(
+            lambda n, o: n.at[:, 1].set(o[:, 1]), c_new, c_seq)
+        p_seq = p_seq + jnp.asarray([1, 0])
+    pf = jax.jit(functools.partial(_prefill_scan, model.decode_step,
+                                   cfg.vocab_size))
+    toks = jnp.asarray(np.array([prompt + [0], [0] * 4], np.int32))
+    last, c_pf = pf(params, cache, toks, jnp.asarray([3, 0], jnp.int32),
+                    start)
+    np.testing.assert_allclose(np.asarray(last)[0],
+                               np.asarray(logits)[0, 0], atol=1e-5,
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(c_pf),
+                    jax.tree_util.tree_leaves(c_seq)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_engine_respects_max_seq(served):
     cfg, model, params = served
     eng = ServeEngine(model, params, num_slots=1, max_seq=8)
