@@ -1,8 +1,12 @@
-"""Fig 5/6: cross-program estimation via universal clustering.
+"""Fig 5/6: cross-program estimation via universal clustering, through
+the `repro.api` service surface.
 
-Pool SemanticBBVs from ALL int-suite programs, k-means into 14 universal
-archetypes, simulate ONE representative interval per archetype, estimate
-every program's CPI from its cluster-occupancy fingerprint.
+Ingest SemanticBBVs from ALL int-suite programs into a SignatureStore,
+`build()` the 14-archetype KnowledgeBase (simulating ONE representative
+interval per archetype), and `estimate()` every program's CPI from its
+cluster-occupancy fingerprint. The reported speedup is weight-aware:
+(total instructions represented) / (instructions in the k simulated
+representative intervals).
 
 Also reports the traditional-BBV attempt at the same task (the paper's
 motivation: order-dependent IDs make this degenerate for real distinct
@@ -13,55 +17,53 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.crossprog import speedup, universal_clustering
+from repro.api import KnowledgeBase, SignatureStore
 from repro.core.simpoint import classic_bbv_matrix
 from repro.data.perfmodel import INORDER_CPU
 
 
 def run(k=14):
-    from benchmarks.lab import get_pipeline
-    pipe, world = get_pipeline()
-    bt = world.block_tbl
-    bbe_table = pipe.encode_blocks(list(bt.values()))
-
-    sigs, pids, cpis, weights = [], [], [], []
+    from benchmarks.lab import get_service
+    svc, world = get_service()
     for p in world.programs:
-        ivs = world.intervals[p.name]
-        sigs.append(pipe.interval_signatures(ivs, bbe_table))
-        pids += [p.name] * len(ivs)
-        cpis.append(world.cpi[(INORDER_CPU.name, p.name)])
-        weights.append([iv.num_instrs for iv in ivs])
-    X = np.concatenate(sigs)
-    C = np.concatenate(cpis)
-    W = np.concatenate(weights).astype(np.float64)
+        svc.ingest_intervals(p.name, world.intervals[p.name],
+                             cpis=world.cpi[(INORDER_CPU.name, p.name)])
+    kb = svc.build(k=k, seed=0)
 
-    res = universal_clustering(X, pids, C, W, k=k, seed=0)
     rows = []
-    for p in sorted(res.est_cpi):
-        f = res.fingerprints[p]
-        rows.append(("fig6", p, f"acc={res.accuracy(p):.4f}",
-                     f"true={res.true_cpi[p]:.3f}",
-                     f"est={res.est_cpi[p]:.3f}",
-                     f"top_cluster={int(f.argmax())}:{f.max():.2f}"))
-    n_total = len(C)
-    rows.append(("fig6", "AVERAGE", f"acc={res.avg_accuracy:.4f}",
-                 f"simulated_points={k}",
+    programs = sorted(kb.est_cpi)
+    for p in programs:
+        est = svc.estimate(p)
+        rows.append(("fig6", p, f"acc={est.accuracy:.4f}",
+                     f"true={est.true_cpi:.3f}",
+                     f"est={est.est_cpi:.3f}",
+                     f"top_cluster={int(est.fingerprint.argmax())}:"
+                     f"{est.fingerprint.max():.2f}"))
+    n_total = len(svc.store)
+    rows.append(("fig6", "AVERAGE", f"acc={kb.avg_accuracy:.4f}",
+                 f"simulated_points={kb.k}",
                  f"total_intervals={n_total}",
-                 f"speedup={speedup(n_total, k):.0f}x"))
+                 f"speedup={svc.estimate(programs[0]).speedup:.0f}x"))
     rows.append(("fig6", "paper_scale_note",
                  "at the paper's 100k intervals this k gives "
                  f"{100000/k:.0f}x (paper reports 7143x)"))
 
-    # traditional BBV on the same task (best case: shared block IDs)
+    # traditional BBV on the same task (best case: shared block IDs) —
+    # the KnowledgeBase is signature-agnostic, so the baseline runs
+    # through the same build/estimate path over a second store
+    bt = world.block_tbl
     order = sorted(bt)
     lens = {b: blk.num_instrs for b, blk in bt.items()}
-    bbv = np.concatenate([
-        classic_bbv_matrix(world.intervals[p.name], order, lens)
-        for p in world.programs])
-    res_bbv = universal_clustering(bbv.astype(np.float32), pids, C, W, k=k,
-                                   seed=0)
+    store_bbv = SignatureStore(len(order))
+    for p in world.programs:
+        ivs = world.intervals[p.name]
+        store_bbv.add(p.name,
+                      classic_bbv_matrix(ivs, order, lens).astype(np.float32),
+                      weights=[iv.num_instrs for iv in ivs],
+                      cpis=world.cpi[(INORDER_CPU.name, p.name)])
+    kb_bbv = KnowledgeBase(store_bbv).build(k=k, seed=0)
     rows.append(("fig6", "AVERAGE-traditional-BBV",
-                 f"acc={res_bbv.avg_accuracy:.4f}",
+                 f"acc={kb_bbv.avg_accuracy:.4f}",
                  "(shared-ID best case)"))
     return rows
 

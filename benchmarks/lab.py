@@ -16,6 +16,7 @@ Trainer machinery.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import pickle
 import tempfile
@@ -26,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SemanticBBVService, ServiceConfig
 from repro.config import TrainConfig
 from repro.core.bbe import (
     BBEConfig, bbe_init, encode_bbe, finetune_triplet_loss, pretrain_loss,
@@ -56,6 +58,40 @@ SIG_CFG = SignatureConfig(bbe_dim=96, d_model=96, sig_dim=64, max_set=48,
 N_INTERVALS = 100           # per program (the paper uses 1000 per 10B instrs)
 
 
+@dataclass(frozen=True)
+class LabConfig:
+    """Typed lab setup (replaces the kwargs sprawl that used to be
+    spread over `get_stage1`/`get_pipeline` call sites). The default
+    instance IS the cached lab; non-default configs cache under a
+    config-keyed filename. `train=False` skips both training stages —
+    the fast path for CI smoke runs on a tiny world."""
+    suite: str = "int"
+    n_programs: Optional[int] = None    # None = whole suite
+    n_intervals: int = N_INTERVALS
+    train: bool = True
+    force: bool = False
+    # stage 1
+    stage1_pretrain_steps: int = 120
+    stage1_triplet_steps: int = 150
+    stage1_batch: int = 12
+    corpus_size: int = 400
+    # stage 2
+    stage2_steps: int = 200
+    stage2_batch: int = 12
+    stage2_lr: float = 1e-3
+    # service
+    k: int = 14
+    impl: str = "xla"
+    assign_impl: str = "reference"
+
+    def service_config(self) -> ServiceConfig:
+        return ServiceConfig(bbe=BBE_CFG, sig=SIG_CFG, impl=self.impl,
+                             assign_impl=self.assign_impl, k=self.k)
+
+
+DEFAULT_LAB = LabConfig()
+
+
 def _train(loss_fn, params, batch_fn, steps, lr=2e-3, tag=""):
     state = adamw_init(params)
     jloss = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
@@ -80,7 +116,15 @@ def _train(loss_fn, params, batch_fn, steps, lr=2e-3, tag=""):
 def get_stage1(pretrain_steps=120, triplet_steps=150, batch=12,
                corpus_size=400, force=False):
     os.makedirs(ART, exist_ok=True)
-    path = os.path.join(ART, "stage1.pkl")
+    # cache keyed by the training params (default keeps its historical
+    # name) — a non-default LabConfig must never be served stale
+    # default-budget params
+    key = (pretrain_steps, triplet_steps, batch, corpus_size)
+    if key == (120, 150, 12, 400):
+        path = os.path.join(ART, "stage1.pkl")
+    else:
+        path = os.path.join(
+            ART, f"stage1_{stable_hash(repr(key)) & 0xffffffff:08x}.pkl")
     if os.path.exists(path) and not force:
         with open(path, "rb") as f:
             return pickle.load(f)
@@ -123,8 +167,9 @@ class World:
 
 
 def get_world(which="int", n_intervals=N_INTERVALS,
-              cpus=(INORDER_CPU,)) -> World:
-    progs = spec_programs(which)
+              cpus=(INORDER_CPU,), n_programs: Optional[int] = None
+              ) -> World:
+    progs = spec_programs(which)[:n_programs]
     bt = block_table(progs)
     intervals = {p.name: trace_program(p, n_intervals) for p in progs}
     cpi = {}
@@ -202,34 +247,74 @@ def _stage2_engine(pipe: SemanticBBVPipeline, sig_params, sig_specs,
     return engine, index
 
 
-def get_pipeline(force=False) -> Tuple[SemanticBBVPipeline, World]:
-    """Fully trained two-stage pipeline + the int-suite world."""
+def _pipeline_cache_path(cfg: LabConfig) -> str:
+    """Default lab keeps its historical cache name; any other config is
+    keyed by a stable hash so variants never collide."""
+    if dataclasses.replace(cfg, force=False) == DEFAULT_LAB:
+        return os.path.join(ART, "pipeline.pkl")
+    tag = stable_hash(repr(dataclasses.replace(cfg, force=False)))
+    return os.path.join(ART, f"pipeline_{tag & 0xffffffff:08x}.pkl")
+
+
+def get_pipeline(force=False, cfg: Optional[LabConfig] = None
+                 ) -> Tuple[SemanticBBVPipeline, World]:
+    """Fully trained two-stage pipeline + the configured world."""
+    cfg = cfg or DEFAULT_LAB
+    force = force or cfg.force
     os.makedirs(ART, exist_ok=True)
-    path = os.path.join(ART, "pipeline.pkl")
-    world = get_world("int")
+    path = _pipeline_cache_path(cfg)
+    world = get_world(cfg.suite, cfg.n_intervals, n_programs=cfg.n_programs)
+    if not cfg.train:
+        return (SemanticBBVPipeline(default_tokenizer(), BBE_CFG, SIG_CFG,
+                                    *_untrained_params(), impl=cfg.impl),
+                world)
     if os.path.exists(path) and not force:
         with open(path, "rb") as f:
             blob = pickle.load(f)
         pipe = SemanticBBVPipeline(default_tokenizer(), BBE_CFG, SIG_CFG,
-                                   blob["bbe"], blob["sig"])
+                                   blob["bbe"], blob["sig"], impl=cfg.impl)
         return pipe, world
-    s1 = get_stage1(force=force)
+    s1 = get_stage1(pretrain_steps=cfg.stage1_pretrain_steps,
+                    triplet_steps=cfg.stage1_triplet_steps,
+                    batch=cfg.stage1_batch, corpus_size=cfg.corpus_size,
+                    force=force)
     sig_params, sig_specs = signature_init(jax.random.PRNGKey(1), SIG_CFG)
     pipe = SemanticBBVPipeline(default_tokenizer(), BBE_CFG, SIG_CFG,
-                               s1["params"], sig_params)
+                               s1["params"], sig_params, impl=cfg.impl)
     log.info("Encoding %d unique blocks...", len(world.block_tbl))
     bbe_table = pipe.encode_blocks(list(world.block_tbl.values()))
 
     log.info("Stage-2 co-training (triplet + CPI + consistency)...")
     engine, index = _stage2_engine(pipe, sig_params, sig_specs, bbe_table,
-                                   steps=200, lr=1e-3, tag="stage2")
+                                   steps=cfg.stage2_steps,
+                                   lr=cfg.stage2_lr, tag="stage2")
     engine.fit(lambda s: _stage2_batch(world, index, pipe,
-                                       INORDER_CPU.name, s, 12),
-               num_steps=200, log_every=40)
+                                       INORDER_CPU.name, s,
+                                       cfg.stage2_batch),
+               num_steps=cfg.stage2_steps, log_every=40)
     pipe.sig_params = engine.params
     with open(path, "wb") as f:
         pickle.dump({"bbe": pipe.bbe_params, "sig": pipe.sig_params}, f)
     return pipe, world
+
+
+def _untrained_params():
+    """Fresh (untrained) Stage-1/Stage-2 params at the lab shapes."""
+    bbe_params, _ = bbe_init(jax.random.PRNGKey(0), BBE_CFG)
+    sig_params, _ = signature_init(jax.random.PRNGKey(1), SIG_CFG)
+    return bbe_params, sig_params
+
+
+def get_service(cfg: Optional[LabConfig] = None
+                ) -> Tuple[SemanticBBVService, World]:
+    """Lab-trained `SemanticBBVService` with the world's blocks already
+    ingested — the entry point for cross-program workflows (fig6, the
+    cross_program_estimation example, CI smoke)."""
+    cfg = cfg or DEFAULT_LAB
+    pipe, world = get_pipeline(cfg=cfg)
+    svc = SemanticBBVService.from_pipeline(pipe, cfg.service_config())
+    svc.ingest_blocks(list(world.block_tbl.values()))
+    return svc, world
 
 
 def fine_tune_for_cpu(pipe: SemanticBBVPipeline, world: World,

@@ -1,12 +1,24 @@
-"""Cross-program knowledge reuse (the paper's headline result, Fig 5/6).
+"""Cross-program knowledge reuse (the paper's headline result, Fig 5/6)
+through the `repro.api` service surface.
 
     PYTHONPATH=src:. python examples/cross_program_estimation.py
 
-Uses the cached lab pipeline (trains it on first run), pools SemanticBBVs
-from all ten SPEC-int-like programs, clusters into 14 universal
-archetypes, simulates one representative each, and estimates every
-program's CPI from its behavioral fingerprint.
+Uses the cached lab pipeline (trains it on first run), ingests
+SemanticBBVs from the SPEC-int-like programs into a SignatureStore,
+builds the 14-archetype KnowledgeBase (one simulated representative
+per archetype), and estimates every program's CPI from its behavioral
+fingerprint. The LAST program is held out of the build and attached
+afterwards against the frozen archetypes — the true reuse use-case:
+estimating a never-clustered program costs zero re-clustering.
+
+Flags:
+    --tiny        3 programs x 24 intervals, untrained pipeline — the
+                  CI smoke configuration (seconds, not minutes)
+    --save DIR    persist the store + knowledge base + summary.json
+                  (atomic checkpoint format) under DIR
 """
+import argparse
+import dataclasses
 import os
 import sys
 
@@ -15,35 +27,65 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 
-from repro.core.crossprog import speedup, universal_clustering
 from repro.data.perfmodel import INORDER_CPU
 
 
-def main():
-    from benchmarks.lab import get_pipeline
-    pipe, world = get_pipeline()
-    table = pipe.encode_blocks(list(world.block_tbl.values()))
-    sigs, pids, cpis = [], [], []
-    for p in world.programs:
-        ivs = world.intervals[p.name]
-        sigs.append(pipe.interval_signatures(ivs, table))
-        pids += [p.name] * len(ivs)
-        cpis.append(world.cpi[(INORDER_CPU.name, p.name)])
-    X, C = np.concatenate(sigs), np.concatenate(cpis)
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="tiny untrained lab world (CI smoke)")
+    ap.add_argument("--save", metavar="DIR", default=None,
+                    help="persist store + knowledge base under DIR")
+    ap.add_argument("--k", type=int, default=None,
+                    help="number of universal archetypes")
+    args = ap.parse_args(argv)
 
-    res = universal_clustering(X, pids, C, k=14, seed=0)
-    print(f"{'program':<18}{'accuracy':>9}{'true':>8}{'est':>8}  fingerprint(top3)")
-    for p in sorted(res.est_cpi):
-        f = res.fingerprints[p]
+    from benchmarks.lab import LabConfig, get_service
+    if args.tiny:
+        cfg = LabConfig(train=False, n_programs=3, n_intervals=24, k=8)
+    else:
+        cfg = LabConfig()
+    if args.k is not None:
+        cfg = dataclasses.replace(cfg, k=args.k)
+
+    svc, world = get_service(cfg)
+    names = [p.name for p in world.programs]
+    base, held_out = names[:-1], names[-1]
+
+    for name in base:
+        svc.ingest_intervals(name, world.intervals[name],
+                             cpis=world.cpi[(INORDER_CPU.name, name)])
+    kb = svc.build()                      # k-means once -> archetypes
+
+    # the reuse path: ingest + attach AFTER build, no re-clustering
+    svc.ingest_intervals(held_out, world.intervals[held_out],
+                         cpis=world.cpi[(INORDER_CPU.name, held_out)])
+    svc.attach(held_out)
+
+    print(f"{'program':<18}{'accuracy':>9}{'true':>8}{'est':>8}"
+          "  fingerprint(top3)")
+    for name in sorted(names):
+        est = svc.estimate(name)
+        f = est.fingerprint
         top = np.argsort(f)[::-1][:3]
         fp = " ".join(f"c{t}:{f[t]:.2f}" for t in top)
-        print(f"{p:<18}{res.accuracy(p):>8.1%}{res.true_cpi[p]:>8.2f}"
-              f"{res.est_cpi[p]:>8.2f}  {fp}")
-    print(f"\naverage accuracy: {res.avg_accuracy:.1%}; "
-          f"{res.k} simulated points for {len(C)} intervals "
-          f"= {speedup(len(C), res.k):.0f}x fewer simulated instructions")
-    print("representatives came from:",
-          sorted(set(res.rep_program)))
+        tag = " (attached)" if name == held_out else ""
+        print(f"{name:<18}{est.accuracy:>8.1%}{est.true_cpi:>8.2f}"
+              f"{est.est_cpi:>8.2f}  {fp}{tag}")
+
+    est = svc.estimate(names[0])
+    print(f"\naverage accuracy: {kb.avg_accuracy:.1%}; "
+          f"{kb.k} simulated points for {len(svc.store)} intervals "
+          f"= {est.speedup:.0f}x fewer simulated instructions "
+          "(weight-aware)")
+    print("representatives came from:", sorted(set(kb.rep_program)))
+    print(f"note: {held_out} was held out of build() and attached against "
+          "the frozen archetypes — its accuracy measures how well the "
+          "base's archetypes cover a never-clustered program")
+
+    if args.save:
+        out = svc.save(args.save)
+        print(f"knowledge base saved under {out}")
 
 
 if __name__ == "__main__":

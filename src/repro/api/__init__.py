@@ -1,0 +1,16 @@
+# repro.api — the unified SemanticBBV service surface.
+#   store.py      SignatureStore: append-only, device-resident signatures
+#   knowledge.py  KnowledgeBase: build/attach/estimate over archetypes
+#   service.py    SemanticBBVService facade + typed ServiceConfig
+from repro.api.knowledge import (
+    ASSIGN_IMPLS, CPIEstimate, KnowledgeBase, assign_signatures,
+    resolve_assign_impl,
+)
+from repro.api.service import SemanticBBVService, ServiceConfig
+from repro.api.store import SignatureStore
+
+__all__ = [
+    "ASSIGN_IMPLS", "CPIEstimate", "KnowledgeBase", "SemanticBBVService",
+    "ServiceConfig", "SignatureStore", "assign_signatures",
+    "resolve_assign_impl",
+]

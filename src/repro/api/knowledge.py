@@ -1,0 +1,357 @@
+"""`KnowledgeBase` — the redesigned cross-program estimation engine.
+
+The paper's headline capability (§IV-C, Fig 5/6) as an incremental
+service instead of a one-shot function:
+
+  build(k)    k-means the WHOLE store into k universal behavioral
+              archetypes, pick one representative interval each, and
+              record the reps' ground-truth CPI — the only "simulation"
+              the knowledge base ever requires.
+  attach(p)   fingerprint a NEW program against the FROZEN archetypes:
+              batched nearest-centroid assignment of its interval
+              signatures (no re-clustering — the true reuse use-case).
+  estimate(p) typed `CPIEstimate`: estimated CPI from the fingerprint x
+              rep-CPI dot product, clamped accuracy when ground truth is
+              known, and the weight-aware speedup.
+
+Assignment backend is selectable per base (`assign_impl`):
+  "reference"         jnp nearest-centroid (kmeans_assign_reference)
+  "numpy"             pure-numpy oracle (parity tests)
+  "pallas"            compiled `kmeans_assign` Pallas kernel (TPU)
+  "pallas_interpret"  same kernel under the interpreter (CPU parity)
+  "auto"              "pallas" on TPU, "reference" elsewhere
+
+Query batches are padded to the store's power-of-two capacity (stored
+programs) or the next power of two (ad-hoc signatures), so every
+backend sees O(log N) shapes — one compile per capacity level.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.api.store import SignatureStore, _capacity_for
+from repro.core.clustering import kmeans, representatives
+from repro.core.crossprog import cpi_accuracy, speedup
+from repro.train.checkpoint import (
+    latest_checkpoint, restore_checkpoint, save_checkpoint,
+)
+
+ASSIGN_IMPLS = ("auto", "reference", "numpy", "pallas", "pallas_interpret")
+
+
+def resolve_assign_impl(impl: str) -> str:
+    if impl not in ASSIGN_IMPLS:
+        raise ValueError(f"assign_impl must be one of {ASSIGN_IMPLS}, "
+                         f"got {impl!r}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return impl
+
+
+def assign_signatures(signatures: np.ndarray, centroids: np.ndarray,
+                      impl: str = "reference"
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched nearest-centroid: (assign (N,) int32, dist2 (N,) f32).
+
+    The impl switch mirrors the set-attention kernels: a numpy oracle,
+    the jnp reference, and the Pallas `kmeans_assign` kernel (compiled
+    or interpreted) — all parity-tested against each other.
+    """
+    impl = resolve_assign_impl(impl)
+    x = np.asarray(signatures, np.float32)
+    c = np.asarray(centroids, np.float32)
+    if impl == "numpy":
+        d2 = (np.sum(x * x, -1, keepdims=True) - 2.0 * (x @ c.T)
+              + np.sum(c * c, -1)[None, :])
+        return d2.argmin(-1).astype(np.int32), d2.min(-1).astype(np.float32)
+    import jax.numpy as jnp
+    if impl == "reference":
+        from repro.kernels.kmeans_assign.ref import kmeans_assign_reference
+        a, d2 = kmeans_assign_reference(jnp.asarray(x), jnp.asarray(c))
+    else:
+        from repro.kernels.kmeans_assign.ops import kmeans_assign
+        a, d2 = kmeans_assign(jnp.asarray(x), jnp.asarray(c),
+                              interpret=(impl == "pallas_interpret"))
+    return np.asarray(a), np.asarray(d2)
+
+
+@dataclasses.dataclass(frozen=True)
+class CPIEstimate:
+    """Typed answer to an `estimate` query.
+
+    `accuracy` is the paper's 1 - |est-true|/true with the divisor
+    clamped away from zero and the result clipped to [0, 1]; None when
+    the program has no ground-truth CPI. `speedup` is weight-aware:
+    (total instructions represented by the knowledge base) /
+    (instructions in the k simulated representative intervals).
+    """
+    program: str
+    est_cpi: float
+    true_cpi: Optional[float]
+    accuracy: Optional[float]
+    speedup: float
+    fingerprint: np.ndarray          # (k,) archetype occupancy, sums to 1
+    k: int
+    simulated_weight: float
+    total_weight: float
+
+
+class KnowledgeBase:
+    """Archetype knowledge over a `SignatureStore` (build once, attach
+    and estimate many). Holds NO interval payload of its own — only the
+    k centroids + representative metadata — so it stays tiny next to
+    the store."""
+
+    def __init__(self, store: SignatureStore, *,
+                 assign_impl: str = "reference"):
+        self.store = store
+        self.assign_impl = assign_impl
+        self.k = 0
+        self.seed = 0
+        self.archetypes: Optional[np.ndarray] = None   # (k, d)
+        self.rep_global_idx = np.zeros(0, np.int64)    # rows into the store
+        self.rep_program: List[str] = []
+        self.rep_cpi = np.zeros(0, np.float32)
+        self.rep_weight = np.zeros(0, np.float32)
+        self.fingerprints: Dict[str, np.ndarray] = {}
+        self.est_cpi: Dict[str, float] = {}
+        self.true_cpi: Dict[str, Optional[float]] = {}
+        self._built_version: Optional[int] = None
+        # (store.version, per-row assignment) for the whole-store query
+        self._row_assign_cache: Optional[Tuple[int, np.ndarray]] = None
+        # rows_for(p) size when p was last fingerprinted — detects
+        # streaming adds to an already-attached program
+        self._attached_nrows: Dict[str, int] = {}
+
+    @property
+    def built(self) -> bool:
+        return self.archetypes is not None
+
+    def _require_built(self):
+        if not self.built:
+            raise RuntimeError("KnowledgeBase.build(k) must run before "
+                               "attach/estimate queries")
+
+    # -------------------------------------------------------------- build
+    def build(self, k: int = 14, seed: int = 0) -> "KnowledgeBase":
+        """Universal clustering over every row currently in the store.
+
+        Uses the same `kmeans` call (++ init, restarts) as the legacy
+        `universal_clustering`, and fingerprints the already-stored
+        programs from k-means' own assignment — bit-compatible with the
+        one-shot path. Programs ingested AFTER build are attached
+        against the frozen archetypes (`attach`), never re-clustered.
+        """
+        if len(self.store) == 0:
+            raise RuntimeError("cannot build a KnowledgeBase over an "
+                               "empty SignatureStore")
+        x = np.asarray(self.store.signatures, np.float32)
+        cents, assign, _ = kmeans(x, k, seed=seed)
+        reps = representatives(x, cents, assign)
+        self.k = int(cents.shape[0])
+        self.seed = seed
+        self.archetypes = cents.astype(np.float32)
+        self.rep_global_idx = np.asarray(reps, np.int64)
+        self.rep_program = [self.store.program_of_row[i] for i in reps]
+        self.rep_cpi = self.store.cpis[reps].astype(np.float32)
+        self.rep_weight = self.store.weights[reps].astype(np.float32)
+        if np.isnan(self.rep_cpi).any():
+            raise ValueError(
+                "representative intervals lack ground-truth CPI; ingest "
+                "intervals with cpis= before build()")
+        self.fingerprints.clear()
+        self.est_cpi.clear()
+        self.true_cpi.clear()
+        self._attached_nrows.clear()
+        self._row_assign_cache = None   # assignments vs OLD archetypes
+        for p in self.store.programs:
+            self._record(p, assign[self.store.rows_for(p)])
+        self._built_version = self.store.version
+        return self
+
+    def _fingerprint(self, row_assign: np.ndarray, weights: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """(fingerprint (k,), normalized weights) from assignments."""
+        w = np.asarray(weights, np.float64)
+        wp = w / max(w.sum(), 1e-30)
+        f = np.zeros(self.k)
+        np.add.at(f, np.asarray(row_assign, np.int64), wp)
+        return f, wp
+
+    def _record(self, program: str, row_assign: np.ndarray) -> np.ndarray:
+        """Fingerprint + CPI bookkeeping for a STORED program from its
+        per-interval assignments (stamps the row count so streaming adds
+        trigger a re-attach on the next estimate)."""
+        rows = self.store.rows_for(program)
+        weights = self.store.weights[rows]
+        cpis = self.store.cpis[rows]
+        f, wp = self._fingerprint(row_assign, weights)
+        self.fingerprints[program] = f
+        self.est_cpi[program] = float(
+            (f * self.rep_cpi.astype(np.float64)).sum())
+        if not np.isnan(np.asarray(cpis)).any():
+            self.true_cpi[program] = float(
+                (wp * np.asarray(cpis, np.float64)).sum())
+        else:
+            self.true_cpi[program] = None
+        self._attached_nrows[program] = len(rows)
+        return f
+
+    # ------------------------------------------------------------ queries
+    def assign(self, signatures: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Nearest-archetype assignment for ad-hoc signatures, padded to
+        the next power of two so repeat queries reuse compiles."""
+        self._require_built()
+        x = np.asarray(signatures, np.float32)
+        n = x.shape[0]
+        cap = _capacity_for(n, 1)
+        if cap > n:
+            x = np.concatenate(
+                [x, np.zeros((cap - n, x.shape[1]), np.float32)])
+        a, d2 = assign_signatures(x, self.archetypes, self.assign_impl)
+        return a[:n], d2[:n]
+
+    def attach(self, program: str,
+               signatures: Optional[np.ndarray] = None,
+               weights: Optional[np.ndarray] = None) -> np.ndarray:
+        """Fingerprint a new, unseen program against the frozen
+        archetypes; returns the (k,) fingerprint.
+
+        With no explicit `signatures`, the program's rows are read from
+        the store through the static-capacity `device_matrix` — the
+        whole store is assigned in ONE batched kernel call (cached per
+        store version), so attaching many late-ingested programs costs
+        one device pass, not one per program.
+
+        With explicit `signatures` this is a PURE QUERY: nothing is
+        recorded into the knowledge base (no est_cpi / avg_accuracy /
+        save() footprint), so ad-hoc probes can never shadow a stored
+        program. Ingest into the store to make a program estimable.
+        """
+        self._require_built()
+        if signatures is None:
+            rows = self.store.rows_for(program)
+            row_assign = self._all_row_assign()[rows]
+            return self._record(program, row_assign)
+        a, _ = self.assign(signatures)
+        f, _ = self._fingerprint(
+            a, np.ones(len(a)) if weights is None else weights)
+        return f
+
+    def _all_row_assign(self) -> np.ndarray:
+        """Assignment of every valid store row, computed over the padded
+        device-resident matrix (static shape per capacity level)."""
+        cached = self._row_assign_cache
+        if cached is not None and cached[0] == self.store.version:
+            return cached[1]
+        a, _ = assign_signatures(np.asarray(self.store.device_matrix),
+                                 self.archetypes, self.assign_impl)
+        a = a[:len(self.store)]
+        self._row_assign_cache = (self.store.version, a)
+        return a
+
+    def estimate(self, program: str) -> CPIEstimate:
+        """Typed CPI estimate; (re-)attaches the program on demand if it
+        was ingested — or gained new rows — after its last fingerprint."""
+        self._require_built()
+        if (program not in self.fingerprints or
+                (program in self.store and
+                 self._attached_nrows.get(program)
+                 != len(self.store.rows_for(program)))):
+            self.attach(program)
+        f = self.fingerprints[program]
+        est = self.est_cpi[program]
+        true = self.true_cpi[program]
+        sim_w = float(self.rep_weight.astype(np.float64).sum())
+        total_w = self.store.total_weight
+        return CPIEstimate(
+            program=program, est_cpi=est, true_cpi=true,
+            accuracy=None if true is None else cpi_accuracy(est, true),
+            speedup=speedup(total_w, sim_w),
+            fingerprint=f, k=self.k,
+            simulated_weight=sim_w, total_weight=total_w)
+
+    @property
+    def avg_accuracy(self) -> float:
+        accs = [cpi_accuracy(self.est_cpi[p], t)
+                for p, t in self.true_cpi.items() if t is not None]
+        return float(np.mean(accs)) if accs else float("nan")
+
+    # -------------------------------------------------------- persistence
+    def save(self, directory: str) -> str:
+        self._require_built()
+        tree = {
+            "archetypes": self.archetypes,
+            "rep_cpi": self.rep_cpi,
+            "rep_weight": self.rep_weight,
+            "rep_global_idx": self.rep_global_idx,
+        }
+        meta = {
+            "k": self.k, "seed": self.seed,
+            "assign_impl": self.assign_impl,
+            "rep_program": self.rep_program,
+            "built_version": self._built_version,
+            "fingerprints": {p: np.asarray(f).tolist()
+                             for p, f in self.fingerprints.items()},
+            "est_cpi": self.est_cpi,
+            "true_cpi": self.true_cpi,
+        }
+        return save_checkpoint(directory, self._built_version or 0, tree,
+                               meta=meta)
+
+    @classmethod
+    def load(cls, directory: str, store: SignatureStore) -> "KnowledgeBase":
+        path = latest_checkpoint(directory)
+        if path is None:
+            raise FileNotFoundError(f"no KB checkpoint under {directory}")
+        import msgpack
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        template = {
+            k: np.zeros(manifest["shapes"][k],
+                        np.dtype(manifest["dtypes"][k]))
+            for k in ("archetypes", "rep_cpi", "rep_weight",
+                      "rep_global_idx")
+        }
+        tree, _, meta = restore_checkpoint(path, template)
+        kb = cls(store, assign_impl=meta["assign_impl"])
+        kb.k = int(meta["k"])
+        kb.seed = int(meta["seed"])
+        kb.archetypes = np.asarray(tree["archetypes"], np.float32)
+        kb.rep_cpi = np.asarray(tree["rep_cpi"], np.float32)
+        kb.rep_weight = np.asarray(tree["rep_weight"], np.float32)
+        kb.rep_global_idx = np.asarray(tree["rep_global_idx"], np.int64)
+        kb.rep_program = list(meta["rep_program"])
+        kb._built_version = meta["built_version"]
+        kb.fingerprints = {p: np.asarray(f, np.float64)
+                           for p, f in meta["fingerprints"].items()}
+        kb.est_cpi = {p: float(v) for p, v in meta["est_cpi"].items()}
+        kb.true_cpi = {p: (None if v is None else float(v))
+                       for p, v in meta["true_cpi"].items()}
+        # loaded fingerprints are current w.r.t. the co-saved store; a
+        # store that grew since save re-attaches on the next estimate
+        kb._attached_nrows = {p: len(store.rows_for(p))
+                              for p in kb.fingerprints if p in store}
+        return kb
+
+    # ----------------------------------------------------------- legacy
+    def as_cross_program_result(self):
+        """`CrossProgramResult` view for the deprecated one-shot API."""
+        from repro.core.crossprog import CrossProgramResult
+        self._require_built()
+        return CrossProgramResult(
+            k=self.k,
+            rep_global_idx=self.rep_global_idx,
+            rep_program=list(self.rep_program),
+            rep_cpi=self.rep_cpi,
+            fingerprints={p: np.asarray(f)
+                          for p, f in self.fingerprints.items()},
+            est_cpi=dict(self.est_cpi),
+            true_cpi={p: v for p, v in self.true_cpi.items()
+                      if v is not None})

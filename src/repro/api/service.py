@@ -1,0 +1,173 @@
+"""`SemanticBBVService` — the one-object public surface (Fig 2 + §IV-C
+as a service).
+
+Composes the three layers the paper describes:
+
+    pipeline   blocks -> BBEs -> interval signatures (Stage 1 + 2)
+    store      append-only, device-resident signature knowledge base
+    knowledge  archetypes + fingerprint / estimate queries
+
+Typical flow:
+
+    svc = SemanticBBVService.create(ServiceConfig(sig=..., bbe=...))
+    svc.ingest_blocks(unique_blocks)
+    svc.ingest_intervals("gcc", intervals, cpis=ground_truth)   # x N
+    svc.build()                       # k-means once -> 14 archetypes
+    svc.ingest_intervals("new", ...)  # later, unseen program
+    est = svc.estimate("new")         # attach (no re-clustering) + CPI
+
+Configuration is ONE typed dataclass (`ServiceConfig`) instead of the
+kwargs sprawl that used to be spread over `SemanticBBVPipeline.create`
+and `benchmarks.lab.get_pipeline`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.api.knowledge import CPIEstimate, KnowledgeBase
+from repro.api.store import SignatureStore
+from repro.core.bbe import BBEConfig
+from repro.core.pipeline import PipelineConfig, SemanticBBVPipeline
+from repro.core.signature import SignatureConfig
+from repro.data.isa import BasicBlock
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Everything a SemanticBBV service instance needs, typed.
+
+    `bbe`/`sig` default to the module defaults when None (exactly what
+    `SemanticBBVPipeline.create()` did). `impl` picks the set-attention
+    backend, `assign_impl` the nearest-centroid backend — both are the
+    same switches the kernels expose ("auto" resolves per jax backend).
+    """
+    seed: int = 0
+    bbe: Optional[BBEConfig] = None
+    sig: Optional[SignatureConfig] = None
+    impl: str = "xla"                 # set-attention: xla|pallas|pallas_interpret
+    assign_impl: str = "reference"    # nearest-centroid: see knowledge.ASSIGN_IMPLS
+    k: int = 14                       # universal archetypes (paper: 14)
+    kmeans_seed: int = 0
+    encode_batch: int = 256           # Stage-1 block batch
+    signature_batch: int = 512        # Stage-2 interval batch
+    store_min_capacity: int = 64      # pad-and-grow floor
+
+    def pipeline_config(self) -> PipelineConfig:
+        return PipelineConfig(seed=self.seed, bbe=self.bbe, sig=self.sig,
+                              impl=self.impl)
+
+
+class SemanticBBVService:
+    """Facade over pipeline + SignatureStore + KnowledgeBase."""
+
+    def __init__(self, pipeline: SemanticBBVPipeline,
+                 cfg: Optional[ServiceConfig] = None,
+                 store: Optional[SignatureStore] = None,
+                 kb: Optional[KnowledgeBase] = None):
+        self.pipe = pipeline
+        self.cfg = cfg or ServiceConfig(
+            bbe=pipeline.bbe_cfg, sig=pipeline.sig_cfg, impl=pipeline.impl)
+        self.bbe_table: Dict[int, np.ndarray] = {}
+        self.store = store if store is not None else SignatureStore(
+            pipeline.sig_cfg.sig_dim,
+            min_capacity=self.cfg.store_min_capacity)
+        self.kb = kb if kb is not None else KnowledgeBase(
+            self.store, assign_impl=self.cfg.assign_impl)
+
+    # ------------------------------------------------------------ factory
+    @classmethod
+    def create(cls, cfg: ServiceConfig = ServiceConfig()
+               ) -> "SemanticBBVService":
+        """Fresh (untrained) pipeline from one typed config."""
+        pipe = SemanticBBVPipeline.from_config(cfg.pipeline_config())
+        return cls(pipe, cfg)
+
+    @classmethod
+    def from_pipeline(cls, pipeline: SemanticBBVPipeline,
+                      cfg: Optional[ServiceConfig] = None
+                      ) -> "SemanticBBVService":
+        """Wrap an already-trained pipeline (e.g. the cached lab one)."""
+        return cls(pipeline, cfg)
+
+    # ------------------------------------------------------------- ingest
+    def ingest_blocks(self, blocks: Sequence[BasicBlock]) -> int:
+        """Stage-1 encode new basic blocks into the service's BBE table
+        (LRU-cached in the pipeline); returns the table size."""
+        self.bbe_table.update(
+            self.pipe.encode_blocks(list(blocks), self.cfg.encode_batch))
+        return len(self.bbe_table)
+
+    def ingest_intervals(self, program: str, intervals: Sequence,
+                         cpis: Optional[Sequence[float]] = None
+                         ) -> np.ndarray:
+        """Signature every interval and append to the store; returns the
+        new store row indices. Interval instruction counts become the
+        store weights (the weight-aware speedup + fingerprint norm).
+        Blocks referenced by the intervals must have been ingested."""
+        sigs = self.pipe.interval_signatures(
+            list(intervals), self.bbe_table, self.cfg.signature_batch)
+        weights = [iv.num_instrs for iv in intervals]
+        return self.store.add(program, sigs, weights, cpis)
+
+    # ------------------------------------------------------------ queries
+    def build(self, k: Optional[int] = None,
+              seed: Optional[int] = None) -> KnowledgeBase:
+        """Universal clustering over everything ingested so far."""
+        return self.kb.build(
+            k=self.cfg.k if k is None else k,
+            seed=self.cfg.kmeans_seed if seed is None else seed)
+
+    def attach(self, program: str) -> np.ndarray:
+        """Fingerprint an ingested-after-build program against the
+        frozen archetypes (batched nearest-centroid, no re-clustering)."""
+        return self.kb.attach(program)
+
+    def attach_intervals(self, program: str, intervals: Sequence
+                         ) -> np.ndarray:
+        """One-shot fingerprint WITHOUT ingesting into the store — a
+        pure query that leaves no footprint in the knowledge base
+        (use `ingest_intervals` + `estimate` for estimable programs)."""
+        sigs = self.pipe.interval_signatures(
+            list(intervals), self.bbe_table, self.cfg.signature_batch)
+        return self.kb.attach(program, signatures=sigs,
+                              weights=[iv.num_instrs for iv in intervals])
+
+    def estimate(self, program: str) -> CPIEstimate:
+        return self.kb.estimate(program)
+
+    # -------------------------------------------------------- persistence
+    def save(self, directory: str) -> str:
+        """Persist store + knowledge base (+ a human-readable summary)
+        under `directory` via the atomic checkpoint infra."""
+        os.makedirs(directory, exist_ok=True)
+        self.store.save(os.path.join(directory, "store"))
+        summary = {"programs": self.store.programs,
+                   "intervals": len(self.store), "built": self.kb.built}
+        if self.kb.built:
+            self.kb.save(os.path.join(directory, "knowledge"))
+            ests = {p: self.kb.estimate(p) for p in self.store.programs}
+            summary.update(
+                k=self.kb.k,
+                avg_accuracy=self.kb.avg_accuracy,
+                speedup=next(iter(ests.values())).speedup if ests else None,
+                estimates={p: {"est_cpi": e.est_cpi, "true_cpi": e.true_cpi,
+                               "accuracy": e.accuracy}
+                           for p, e in ests.items()})
+        with open(os.path.join(directory, "summary.json"), "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        return directory
+
+    @classmethod
+    def load(cls, directory: str, pipeline: SemanticBBVPipeline,
+             cfg: Optional[ServiceConfig] = None) -> "SemanticBBVService":
+        """Rehydrate a saved service around a (trained) pipeline."""
+        store = SignatureStore.load(os.path.join(directory, "store"))
+        kb_dir = os.path.join(directory, "knowledge")
+        kb = (KnowledgeBase.load(kb_dir, store)
+              if os.path.isdir(kb_dir) else None)
+        return cls(pipeline, cfg, store=store, kb=kb)

@@ -1,0 +1,231 @@
+"""`SignatureStore` — the persistent knowledge-base substrate.
+
+An append-only store of interval signatures plus the per-interval
+metadata the cross-program workflow needs (program label, instruction
+weight, ground-truth CPI where known). Two design rules, both borrowed
+from the inference path's `BBEIndex`:
+
+  PAD-AND-GROW. Host arrays are allocated at power-of-two capacity and
+  doubled on overflow, and `device_matrix` exposes the WHOLE capacity
+  buffer (invalid rows zero) as one device array. Batched queries over
+  the store therefore see O(log N) distinct shapes over the lifetime of
+  the store — every jitted consumer (nearest-centroid assignment, any
+  future ANN probe) compiles once per capacity level, not once per
+  `add`.
+
+  APPEND-ONLY. Rows are immutable once added; `version` increments per
+  `add`, so consumers (e.g. `KnowledgeBase`) can cache derived state
+  keyed on it and re-derive only what the new rows invalidate.
+
+Persistence reuses the training checkpoint infra (atomic rename,
+manifest + npz), so a store survives crashes mid-save and a
+save -> load round-trip is bit-identical.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.checkpoint import (
+    latest_checkpoint, restore_checkpoint, save_checkpoint,
+)
+
+_MIN_CAPACITY = 64
+
+
+def _capacity_for(n: int, minimum: int = _MIN_CAPACITY) -> int:
+    cap = max(minimum, 1)
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+class SignatureStore:
+    """Append-only, device-resident store of interval signatures.
+
+    Rows carry (signature (d,), weight, cpi, program). `weight` is the
+    interval's instruction count (uniform 1.0 when unknown) — it drives
+    both fingerprint normalization and the weight-aware speedup metric.
+    `cpi` is the ground-truth per-interval CPI, NaN when unknown: the
+    knowledge base only ever consults it at the k representative
+    intervals (the paper's "simulate only the archetypes") and for
+    accuracy evaluation.
+    """
+
+    def __init__(self, sig_dim: int, min_capacity: int = _MIN_CAPACITY):
+        if sig_dim <= 0:
+            raise ValueError(f"sig_dim must be positive, got {sig_dim}")
+        self.sig_dim = int(sig_dim)
+        self.min_capacity = int(min_capacity)
+        self.version = 0
+        self._n = 0
+        cap = _capacity_for(0, self.min_capacity)
+        self._sigs = np.zeros((cap, self.sig_dim), np.float32)
+        self._weights = np.zeros((cap,), np.float32)
+        self._cpis = np.full((cap,), np.nan, np.float32)
+        self._program_of_row: List[str] = []
+        self._program_rows: Dict[str, List[int]] = {}
+        self._device: Optional[jnp.ndarray] = None
+
+    # ------------------------------------------------------------- shape
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def capacity(self) -> int:
+        return self._sigs.shape[0]
+
+    @property
+    def programs(self) -> List[str]:
+        """Program names in first-insertion order."""
+        return list(self._program_rows)
+
+    def __contains__(self, program: str) -> bool:
+        return program in self._program_rows
+
+    # ------------------------------------------------------------ ingest
+    def _grow_to(self, n: int):
+        cap = _capacity_for(n, self.min_capacity)
+        if cap == self.capacity:
+            return
+        sigs = np.zeros((cap, self.sig_dim), np.float32)
+        sigs[:self._n] = self._sigs[:self._n]
+        weights = np.zeros((cap,), np.float32)
+        weights[:self._n] = self._weights[:self._n]
+        cpis = np.full((cap,), np.nan, np.float32)
+        cpis[:self._n] = self._cpis[:self._n]
+        self._sigs, self._weights, self._cpis = sigs, weights, cpis
+        self._device = None
+
+    def add(self, program: str, signatures: np.ndarray,
+            weights: Optional[Sequence[float]] = None,
+            cpis: Optional[Sequence[float]] = None) -> np.ndarray:
+        """Append one program's interval rows; returns their row indices.
+
+        A program may be added in several calls (streaming ingest); rows
+        accumulate. Signatures are stored as float32 — the dtype every
+        query path already uses.
+        """
+        sigs = np.asarray(signatures, np.float32)
+        if sigs.ndim != 2 or sigs.shape[1] != self.sig_dim:
+            raise ValueError(
+                f"signatures must be (N, {self.sig_dim}), got {sigs.shape}")
+        b = sigs.shape[0]
+        w = (np.ones(b, np.float32) if weights is None
+             else np.asarray(weights, np.float32))
+        c = (np.full(b, np.nan, np.float32) if cpis is None
+             else np.asarray(cpis, np.float32))
+        if w.shape != (b,) or c.shape != (b,):
+            raise ValueError("weights/cpis must be 1-D of len(signatures)")
+        self._grow_to(self._n + b)
+        rows = np.arange(self._n, self._n + b)
+        self._sigs[rows] = sigs
+        self._weights[rows] = w
+        self._cpis[rows] = c
+        self._program_of_row.extend([program] * b)
+        self._program_rows.setdefault(program, []).extend(rows.tolist())
+        self._n += b
+        self.version += 1
+        self._device = None
+        return rows
+
+    # ------------------------------------------------------------- views
+    def rows_for(self, program: str) -> np.ndarray:
+        if program not in self._program_rows:
+            raise KeyError(f"program {program!r} not in store "
+                           f"(have {self.programs})")
+        return np.asarray(self._program_rows[program], np.int64)
+
+    @property
+    def signatures(self) -> np.ndarray:
+        """(N, d) valid rows (read-only view)."""
+        v = self._sigs[:self._n]
+        v.flags.writeable = False
+        return v
+
+    @property
+    def weights(self) -> np.ndarray:
+        v = self._weights[:self._n]
+        v.flags.writeable = False
+        return v
+
+    @property
+    def cpis(self) -> np.ndarray:
+        v = self._cpis[:self._n]
+        v.flags.writeable = False
+        return v
+
+    @property
+    def program_of_row(self) -> List[str]:
+        return list(self._program_of_row)
+
+    @property
+    def total_weight(self) -> float:
+        return float(self._weights[:self._n].astype(np.float64).sum())
+
+    @property
+    def device_matrix(self) -> jnp.ndarray:
+        """(capacity, d) device array; rows >= len(self) are zero.
+
+        Uploaded lazily and cached until the next `add`; the static
+        capacity shape is what keeps downstream jitted queries at one
+        compile per capacity level.
+        """
+        if self._device is None:
+            self._device = jnp.asarray(self._sigs)
+        return self._device
+
+    # ------------------------------------------------------- persistence
+    def save(self, directory: str) -> str:
+        """Checkpoint the store (atomic; bit-identical on reload)."""
+        tree = {
+            "signatures": self._sigs[:self._n].copy(),
+            "weights": self._weights[:self._n].copy(),
+            "cpis": self._cpis[:self._n].copy(),
+        }
+        meta = {
+            "sig_dim": self.sig_dim,
+            "min_capacity": self.min_capacity,
+            "program_of_row": list(self._program_of_row),
+        }
+        return save_checkpoint(directory, self.version, tree, meta=meta)
+
+    @classmethod
+    def load(cls, directory: str) -> "SignatureStore":
+        path = latest_checkpoint(directory)
+        if path is None:
+            raise FileNotFoundError(f"no store checkpoint under {directory}")
+        import msgpack  # same dep as the checkpoint writer
+        import os
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        template = {
+            k: np.zeros(manifest["shapes"][k],
+                        np.dtype(manifest["dtypes"][k]))
+            for k in ("signatures", "weights", "cpis")
+        }
+        tree, version, meta = restore_checkpoint(path, template)
+        sigs = np.asarray(tree["signatures"], np.float32)
+        store = cls(int(meta["sig_dim"]),
+                    min_capacity=int(meta["min_capacity"]))
+        n = sigs.shape[0]
+        store._grow_to(n)
+        store._sigs[:n] = sigs
+        store._weights[:n] = np.asarray(tree["weights"], np.float32)
+        store._cpis[:n] = np.asarray(tree["cpis"], np.float32)
+        store._program_of_row = list(meta["program_of_row"])
+        for i, p in enumerate(store._program_of_row):
+            store._program_rows.setdefault(p, []).append(i)
+        store._n = n
+        store.version = int(version)
+        return store
+
+    # ------------------------------------------------------------- misc
+    def grouped_rows(self) -> Dict[str, np.ndarray]:
+        return {p: self.rows_for(p) for p in self.programs}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"SignatureStore(n={self._n}, capacity={self.capacity}, "
+                f"sig_dim={self.sig_dim}, programs={len(self.programs)})")

@@ -5,8 +5,10 @@
 #   losses.py     triplet / Huber-CPI / consistency objectives
 #   clustering.py jit k-means (++ init, Pallas assign kernel option)
 #   simpoint.py   intra-program SimPoint workflow (Fig 4)
-#   crossprog.py  universal clustering + cross-program estimation (Fig 5/6)
-#   pipeline.py   end-to-end public API (Fig 2)
+#   crossprog.py  metric helpers + DEPRECATED one-shot universal clustering
+#                 (the cross-program service now lives in repro.api)
+#   pipeline.py   end-to-end signature pipeline (Fig 2); the public
+#                 service facade composing it is repro.api.SemanticBBVService
 from repro.core.tokenizer import MultiDimTokenizer, default_tokenizer
 from repro.core.bbe import BBEConfig, bbe_init, encode_bbe, pretrain_loss, \
     finetune_triplet_loss
@@ -18,5 +20,5 @@ from repro.core.clustering import kmeans, representatives
 from repro.core.simpoint import run_simpoint, classic_bbv_matrix, \
     SimPointResult
 from repro.core.crossprog import universal_clustering, CrossProgramResult, \
-    speedup
-from repro.core.pipeline import SemanticBBVPipeline
+    speedup, cpi_accuracy
+from repro.core.pipeline import SemanticBBVPipeline, PipelineConfig

@@ -1,21 +1,51 @@
 """Cross-program estimation via universal clustering (paper §IV-C, Fig 5/6).
 
-1. Pool SemanticBBV signatures of intervals from ALL programs.
-2. K-means into `k` universal behavioral archetypes (paper: 14).
-3. Simulate ONLY the most-representative interval of each archetype.
-4. Estimate every program's CPI from its cluster-occupancy fingerprint.
+DEPRECATED surface: the one-shot `universal_clustering` function is kept
+as a thin compatibility shim over the incremental service API in
+`repro.api` (`SignatureStore` + `KnowledgeBase`), which additionally
+supports attaching new programs to a frozen archetype base without
+re-clustering, persistence, and kernel-backed batched assignment. New
+code should use `repro.api`.
 
-The speedup metric is (total instructions represented) / (instructions
-actually simulated) — the paper's 7143× for 1T instrs and 14 points.
+Shared metric helpers live here (both surfaces use them):
+  `cpi_accuracy` — the paper's 1 - |est-true|/true, with the divisor
+      clamped away from zero and the result clipped into [0, 1], so a
+      degenerate true CPI can never yield -inf/NaN accuracy.
+  `speedup` — (instructions represented) / (instructions simulated).
+      Pass scalars (n_intervals, k) for the uniform-interval case or
+      per-interval instruction weights for the weight-aware case.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.clustering import kmeans, representatives
+#: Floor for the |true CPI| divisor in the accuracy metric.
+ACCURACY_EPS = 1e-9
+
+
+def cpi_accuracy(est: float, true: float, eps: float = ACCURACY_EPS) -> float:
+    """Clamped paper accuracy: 1 - |est - true| / max(|true|, eps),
+    clipped into [0, 1]. Always finite, even at true == 0."""
+    err = abs(float(est) - float(true)) / max(abs(float(true)), eps)
+    return float(np.clip(1.0 - err, 0.0, 1.0))
+
+
+def speedup(total, simulated) -> float:
+    """Simulated-instruction reduction factor.
+
+    Weight-aware: both arguments may be scalars OR arrays of
+    per-interval instruction counts — `speedup(n_intervals, k)` keeps
+    the legacy uniform-interval behaviour, while
+    `speedup(all_weights, all_weights[rep_indices])` accounts for
+    non-uniform interval sizes (arrays are summed).
+    """
+    t = float(np.asarray(total, np.float64).sum())
+    s = float(np.asarray(simulated, np.float64).sum())
+    return t / max(s, 1e-30)
 
 
 @dataclass
@@ -29,8 +59,9 @@ class CrossProgramResult:
     true_cpi: Dict[str, float]
 
     def accuracy(self, program: str) -> float:
-        t, e = self.true_cpi[program], self.est_cpi[program]
-        return 1.0 - abs(e - t) / t
+        """Clamped accuracy (see `cpi_accuracy`) — finite even when the
+        program's true CPI is zero or near-zero."""
+        return cpi_accuracy(self.est_cpi[program], self.true_cpi[program])
 
     @property
     def avg_accuracy(self) -> float:
@@ -41,35 +72,39 @@ def universal_clustering(signatures: np.ndarray, program_ids: List[str],
                          interval_cpis: np.ndarray,
                          interval_weights: Optional[np.ndarray] = None,
                          k: int = 14, seed: int = 0) -> CrossProgramResult:
-    """signatures: (N, d) pooled across programs; program_ids: len-N labels;
-    interval_cpis: (N,) ground truth consulted ONLY at the k reps (+ for
-    final accuracy evaluation)."""
-    n = signatures.shape[0]
-    x = signatures.astype(np.float32)
-    w = interval_weights if interval_weights is not None else np.ones(n)
-    cents, assign, _ = kmeans(x, k, seed=seed)
-    reps = representatives(x, cents, assign)
-    rep_cpi = interval_cpis[reps]                 # the only "simulation"
-    programs = sorted(set(program_ids))
+    """DEPRECATED: one-shot wrapper over `repro.api.KnowledgeBase`.
+
+    signatures: (N, d) pooled across programs; program_ids: len-N
+    labels; interval_cpis: (N,) ground truth consulted ONLY at the k
+    reps (+ for final accuracy evaluation). Prefer the incremental API:
+
+        store = SignatureStore(sig_dim)
+        store.add(program, sigs, weights, cpis)     # per program
+        kb = KnowledgeBase(store).build(k)
+        kb.estimate(program)                        # -> CPIEstimate
+    """
+    warnings.warn(
+        "universal_clustering is deprecated; use repro.api.SignatureStore "
+        "+ KnowledgeBase (build/attach/estimate)", DeprecationWarning,
+        stacklevel=2)
+    from repro.api import KnowledgeBase, SignatureStore
+
+    sigs = np.asarray(signatures, np.float32)
+    n = sigs.shape[0]
+    if len(program_ids) != n or np.asarray(interval_cpis).shape[0] != n:
+        raise ValueError("signatures/program_ids/interval_cpis disagree "
+                         "on N")
+    w = (np.ones(n) if interval_weights is None
+         else np.asarray(interval_weights))
+    store = SignatureStore(sigs.shape[1], min_capacity=max(64, n))
+    # append in pooled order, one run of consecutive same-program rows
+    # per add(), so store row order == the caller's pooled order
     pid_arr = np.asarray(program_ids)
-    fingerprints: Dict[str, np.ndarray] = {}
-    est: Dict[str, float] = {}
-    true: Dict[str, float] = {}
-    for p in programs:
-        sel = pid_arr == p
-        wp = w[sel] / w[sel].sum()
-        f = np.zeros(k)
-        np.add.at(f, assign[sel], wp)
-        fingerprints[p] = f
-        est[p] = float((f * rep_cpi).sum())
-        true[p] = float((wp * interval_cpis[sel]).sum())
-    res = CrossProgramResult(
-        k=k, rep_global_idx=reps,
-        rep_program=[program_ids[i] for i in reps], rep_cpi=rep_cpi,
-        fingerprints=fingerprints, est_cpi=est, true_cpi=true)
-    return res
-
-
-def speedup(n_total_intervals: int, k: int) -> float:
-    """Simulated-instruction reduction factor (interval sizes are uniform)."""
-    return n_total_intervals / k
+    start = 0
+    for i in range(1, n + 1):
+        if i == n or pid_arr[i] != pid_arr[start]:
+            store.add(str(pid_arr[start]), sigs[start:i], w[start:i],
+                      np.asarray(interval_cpis)[start:i])
+            start = i
+    kb = KnowledgeBase(store).build(k=k, seed=seed)
+    return kb.as_cross_program_result()

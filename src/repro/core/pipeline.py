@@ -1,5 +1,7 @@
-"""End-to-end SemanticBBV pipeline (Fig. 2): the public API gluing the
-tokenizer, the Stage-1 encoder, and the Stage-2 aggregator.
+"""End-to-end SemanticBBV pipeline (Fig. 2): glues the tokenizer, the
+Stage-1 encoder, and the Stage-2 aggregator. (The public service facade
+composing this with the signature store + knowledge base is
+`repro.api.SemanticBBVService`.)
 
 Typical flow (see examples/):
     pipe = SemanticBBVPipeline.create(rng)
@@ -161,6 +163,29 @@ def _signature_from_rows(params, cfg, matrix, row_ids, freqs, mask,
     return sig_mod.signature_apply(params, cfg, bbes, freqs, mask, impl)
 
 
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Typed construction config for `SemanticBBVPipeline` (the facade
+    `repro.api.ServiceConfig` embeds one) — replaces the positional
+    rng/bbe_cfg/sig_cfg/impl kwargs sprawl. None configs resolve to the
+    module defaults, with the signature input width tied to the BBE
+    output width."""
+    seed: int = 0
+    bbe: Optional[bbe_mod.BBEConfig] = None
+    sig: Optional[sig_mod.SignatureConfig] = None
+    impl: str = "xla"   # set-attention backend (see repro/kernels)
+
+    def resolve(self) -> Tuple[bbe_mod.BBEConfig, sig_mod.SignatureConfig]:
+        bbe_cfg = self.bbe or bbe_mod.BBEConfig()
+        sig_cfg = self.sig or sig_mod.SignatureConfig(
+            bbe_dim=bbe_cfg.bbe_dim)
+        if sig_cfg.bbe_dim != bbe_cfg.bbe_dim:
+            raise ValueError(
+                f"sig.bbe_dim ({sig_cfg.bbe_dim}) must match bbe.bbe_dim "
+                f"({bbe_cfg.bbe_dim})")
+        return bbe_cfg, sig_cfg
+
+
 @dataclasses.dataclass
 class SemanticBBVPipeline:
     tok: MultiDimTokenizer
@@ -183,6 +208,13 @@ class SemanticBBVPipeline:
         bbe_params, _ = bbe_mod.bbe_init(k1, bbe_cfg, tok)
         sig_params, _ = sig_mod.signature_init(k2, sig_cfg)
         return cls(tok, bbe_cfg, sig_cfg, bbe_params, sig_params, impl)
+
+    @classmethod
+    def from_config(cls, cfg: PipelineConfig) -> "SemanticBBVPipeline":
+        """Typed-config twin of `create` (the service-facade entry)."""
+        bbe_cfg, sig_cfg = cfg.resolve()
+        return cls.create(jax.random.PRNGKey(cfg.seed), bbe_cfg, sig_cfg,
+                          impl=cfg.impl)
 
     # ----------------------------------------------------------- jit cache
     def _jit(self, name: str, builder):

@@ -1,0 +1,397 @@
+"""Tests for the `repro.api` service surface: SignatureStore growth +
+persistence, KnowledgeBase build/attach/estimate (incl. the attach-
+parity acceptance criteria), assignment-kernel impl parity, and the
+SemanticBBVService facade end-to-end on a tiny real pipeline."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    CPIEstimate, KnowledgeBase, SemanticBBVService, ServiceConfig,
+    SignatureStore, assign_signatures, resolve_assign_impl,
+)
+from repro.core.bbe import BBEConfig
+from repro.core.crossprog import cpi_accuracy, universal_clustering
+from repro.core.pipeline import PipelineConfig, SemanticBBVPipeline
+from repro.core.signature import SignatureConfig
+from repro.data.perfmodel import INORDER_CPU, interval_cpi
+from repro.data.trace import block_table, trace_program
+
+
+# --------------------------------------------------------------- toy data
+
+def _blob_program(seed, centers, n_per=25, noise=0.05):
+    """Synthetic program drawn from shared behavioral blobs; CPI is a
+    deterministic function of the blob, so archetype estimation is
+    near-exact and cluster occupancy is unambiguous."""
+    rng = np.random.RandomState(seed)
+    sigs, cpis = [], []
+    for ph, c in enumerate(centers):
+        sigs.append(c + rng.randn(n_per, centers.shape[1]) * noise)
+        cpis.append(np.full(n_per, 1.0 + 2.0 * ph))
+    return (np.concatenate(sigs).astype(np.float32),
+            np.concatenate(cpis).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def blob_centers():
+    return (np.random.RandomState(42).randn(3, 8) * 6).astype(np.float32)
+
+
+def _filled_store(blob_centers, names, weights=None):
+    store = SignatureStore(8, min_capacity=16)
+    for i, name in enumerate(names):
+        s, c = _blob_program(i, blob_centers)
+        w = None if weights is None else weights[i]
+        store.add(name, s, weights=w, cpis=c)
+    return store
+
+
+# ------------------------------------------------------------------ store
+
+def test_store_pad_and_grow_static_shapes():
+    store = SignatureStore(4, min_capacity=8)
+    assert store.capacity == 8
+    m0 = store.device_matrix
+    assert m0.shape == (8, 4)
+    store.add("a", np.ones((5, 4), np.float32))
+    assert store.capacity == 8                       # still first level
+    assert store.device_matrix.shape == m0.shape     # static query shape
+    store.add("b", np.full((7, 4), 2.0, np.float32))
+    assert len(store) == 12
+    assert store.capacity == 16                      # doubled once
+    assert store.device_matrix.shape == (16, 4)
+    # invalid rows are zero on device (masked by construction)
+    np.testing.assert_array_equal(
+        np.asarray(store.device_matrix)[12:], 0.0)
+    assert store.programs == ["a", "b"]
+    np.testing.assert_array_equal(store.rows_for("b"), np.arange(5, 12))
+
+
+def test_store_append_only_bookkeeping():
+    store = SignatureStore(3)
+    r1 = store.add("p", np.ones((2, 3), np.float32), weights=[10, 20],
+                   cpis=[1.0, 2.0])
+    r2 = store.add("p", np.zeros((1, 3), np.float32), weights=[30],
+                   cpis=[3.0])
+    np.testing.assert_array_equal(np.concatenate([r1, r2]), np.arange(3))
+    np.testing.assert_array_equal(store.rows_for("p"), np.arange(3))
+    assert store.total_weight == pytest.approx(60.0)
+    assert store.version == 2
+    with pytest.raises(KeyError):
+        store.rows_for("unknown")
+    with pytest.raises(ValueError):
+        store.add("p", np.ones((2, 5), np.float32))
+
+
+def test_store_save_load_bit_identical(tmp_path, blob_centers):
+    store = _filled_store(blob_centers, ["A", "B"],
+                          weights=[np.arange(75) + 1.0,
+                                   np.arange(75) + 5.0])
+    store.save(str(tmp_path / "store"))
+    loaded = SignatureStore.load(str(tmp_path / "store"))
+    assert len(loaded) == len(store)
+    assert loaded.programs == store.programs
+    assert loaded.sig_dim == store.sig_dim
+    np.testing.assert_array_equal(loaded.signatures, store.signatures)
+    np.testing.assert_array_equal(loaded.weights, store.weights)
+    np.testing.assert_array_equal(loaded.cpis, store.cpis)
+    assert loaded.program_of_row == store.program_of_row
+
+
+# ------------------------------------------------- assignment impl parity
+
+def test_assign_impl_parity_kernel_vs_numpy():
+    """Acceptance: the kmeans_assign kernel path behind the impl=
+    switch must match the numpy reference exactly on assignments."""
+    rng = np.random.RandomState(3)
+    x = rng.randn(37, 16).astype(np.float32)        # non-tile-aligned N
+    c = rng.randn(5, 16).astype(np.float32)
+    a_np, d_np = assign_signatures(x, c, impl="numpy")
+    for impl in ("reference", "pallas_interpret"):
+        a, d = assign_signatures(x, c, impl=impl)
+        np.testing.assert_array_equal(a, a_np, err_msg=impl)
+        np.testing.assert_allclose(d, d_np, rtol=1e-4, atol=1e-4,
+                                   err_msg=impl)
+
+
+def test_resolve_assign_impl():
+    assert resolve_assign_impl("numpy") == "numpy"
+    resolved = resolve_assign_impl("auto")
+    expected = "pallas" if jax.default_backend() == "tpu" else "reference"
+    assert resolved == expected
+    with pytest.raises(ValueError):
+        resolve_assign_impl("bogus")
+
+
+def test_knowledge_base_attach_uses_kernel_impl(blob_centers):
+    """attach() through impl="pallas_interpret" reproduces the
+    reference-impl fingerprints (kernel runs inside the query path)."""
+    fingerprints = {}
+    for impl in ("reference", "pallas_interpret", "numpy"):
+        store = _filled_store(blob_centers, ["A", "B"])
+        kb = KnowledgeBase(store, assign_impl=impl).build(k=3, seed=0)
+        sP, cP = _blob_program(9, blob_centers)
+        store.add("P", sP, cpis=cP)
+        fingerprints[impl] = kb.attach("P")
+    np.testing.assert_array_equal(fingerprints["pallas_interpret"],
+                                  fingerprints["numpy"])
+    np.testing.assert_array_equal(fingerprints["reference"],
+                                  fingerprints["numpy"])
+
+
+# --------------------------------------------------------- attach parity
+
+def test_attach_matches_build_fingerprint_exactly(blob_centers):
+    """A program present at build() must fingerprint identically when
+    re-attached through the batched kernel query path."""
+    store = _filled_store(blob_centers, ["A", "B", "C"])
+    kb = KnowledgeBase(store).build(k=3, seed=0)
+    built = {p: kb.fingerprints[p].copy() for p in store.programs}
+    for p in store.programs:
+        attached = kb.attach(p)      # overwrites via the query path
+        np.testing.assert_array_equal(attached, built[p], err_msg=p)
+
+
+def test_attach_unseen_matches_full_rebuild(blob_centers):
+    """Acceptance: attaching P to a base built WITHOUT P must match the
+    fingerprint a full rebuild INCLUDING P produces (after aligning the
+    two bases' cluster labelings — k-means order is not canonical)."""
+    base = _filled_store(blob_centers, ["A", "B"])
+    kb = KnowledgeBase(base).build(k=3, seed=0)
+    sP, cP = _blob_program(11, blob_centers)
+    base.add("P", sP, cpis=cP)
+    f_attach = kb.attach("P")
+
+    full = _filled_store(blob_centers, ["A", "B"])
+    full.add("P", sP, cpis=cP)
+    kb_full = KnowledgeBase(full).build(k=3, seed=0)
+    # align: archetype j of the rebuild -> nearest archetype of the base
+    perm, _ = assign_signatures(kb_full.archetypes, kb.archetypes,
+                                impl="numpy")
+    assert sorted(perm.tolist()) == [0, 1, 2]        # a real bijection
+    f_rebuild = np.zeros_like(f_attach)
+    np.add.at(f_rebuild, perm, kb_full.fingerprints["P"])
+    np.testing.assert_allclose(f_attach, f_rebuild, atol=1e-12)
+    assert kb.estimate("P").est_cpi == pytest.approx(
+        kb_full.estimate("P").est_cpi, rel=1e-3)
+
+
+def test_rebuild_invalidates_row_assign_cache(blob_centers):
+    """Regression: re-build() must drop the whole-store assignment
+    cache — stale assignments against the OLD archetypes would index
+    out of range (or silently permute) under the new ones."""
+    store = _filled_store(blob_centers, ["A", "B"])
+    kb = KnowledgeBase(store).build(k=4, seed=0)
+    sP, cP = _blob_program(19, blob_centers)
+    store.add("P", sP, cpis=cP)
+    kb.attach("P")                        # populates the version cache
+    kb.build(k=2, seed=0)                 # same store version, new k
+    f = kb.attach("P")                    # must NOT reuse k=4 labels
+    assert f.shape == (2,)
+    np.testing.assert_allclose(f.sum(), 1.0, atol=1e-12)
+    assert (kb._all_row_assign() < 2).all()
+
+
+def test_estimate_refreshes_after_streaming_add(blob_centers):
+    """Regression: rows streamed into an already-attached program must
+    be reflected by the next estimate, not silently ignored."""
+    store = _filled_store(blob_centers, ["A", "B"])
+    kb = KnowledgeBase(store).build(k=3, seed=0)
+    sP, cP = _blob_program(23, blob_centers)
+    third = len(sP) // 3
+    store.add("P", sP[:third], cpis=cP[:third])
+    f1 = kb.estimate("P").fingerprint.copy()
+    store.add("P", sP[third:], cpis=cP[third:])      # streaming ingest
+    f2 = kb.estimate("P").fingerprint
+    assert not np.array_equal(f1, f2)
+    # the refreshed fingerprint covers ALL of P's rows vs the same
+    # frozen archetypes
+    rows = store.rows_for("P")
+    a, _ = kb.assign(store.signatures[rows])
+    w = store.weights[rows].astype(np.float64)
+    f_exp = np.zeros(kb.k)
+    np.add.at(f_exp, a.astype(np.int64), w / w.sum())
+    np.testing.assert_allclose(f2, f_exp, atol=1e-12)
+
+
+def test_estimate_before_build_raises(blob_centers):
+    store = _filled_store(blob_centers, ["A"])
+    kb = KnowledgeBase(store)
+    with pytest.raises(RuntimeError):
+        kb.estimate("A")
+    with pytest.raises(RuntimeError):
+        KnowledgeBase(SignatureStore(8)).build(k=2)
+
+
+# ------------------------------------------------------------- estimates
+
+def test_estimate_fields_and_weight_aware_speedup(blob_centers):
+    w = [np.full(75, 2.0e6), np.linspace(1e6, 5e6, 75)]
+    store = _filled_store(blob_centers, ["A", "B"], weights=w)
+    kb = KnowledgeBase(store).build(k=3, seed=0)
+    est = kb.estimate("B")
+    assert isinstance(est, CPIEstimate)
+    assert est.k == 3
+    np.testing.assert_allclose(est.fingerprint.sum(), 1.0, atol=1e-9)
+    assert est.accuracy == cpi_accuracy(est.est_cpi, est.true_cpi)
+    # weight-aware: total store weight over the k reps' weights
+    total = store.total_weight
+    sim = float(store.weights[kb.rep_global_idx].astype(np.float64).sum())
+    assert est.total_weight == pytest.approx(total)
+    assert est.simulated_weight == pytest.approx(sim)
+    assert est.speedup == pytest.approx(total / sim)
+    assert est.speedup != pytest.approx(len(store) / kb.k)  # non-uniform
+
+
+def test_estimate_without_ground_truth(blob_centers):
+    store = _filled_store(blob_centers, ["A", "B"])
+    kb = KnowledgeBase(store).build(k=3, seed=0)
+    sP, _ = _blob_program(13, blob_centers)
+    store.add("Q", sP)                               # no cpis
+    est = kb.estimate("Q")                           # attach on demand
+    assert est.true_cpi is None and est.accuracy is None
+    assert np.isfinite(est.est_cpi)
+
+
+def test_save_load_estimate_bit_identical(tmp_path, blob_centers):
+    """Acceptance: SignatureStore (+KB) save -> load -> estimate must be
+    bit-identical to the in-memory answer."""
+    store = _filled_store(blob_centers, ["A", "B"],
+                          weights=[np.arange(75) + 1.0,
+                                   np.arange(75) + 3.0])
+    kb = KnowledgeBase(store).build(k=3, seed=0)
+    sP, cP = _blob_program(17, blob_centers)
+    store.add("P", sP, cpis=cP)
+    kb.attach("P")
+    before = {p: kb.estimate(p) for p in store.programs}
+
+    store.save(str(tmp_path / "store"))
+    kb.save(str(tmp_path / "knowledge"))
+    store2 = SignatureStore.load(str(tmp_path / "store"))
+    kb2 = KnowledgeBase.load(str(tmp_path / "knowledge"), store2)
+    for p, e1 in before.items():
+        e2 = kb2.estimate(p)
+        assert e2.est_cpi == e1.est_cpi, p           # bit-identical
+        assert e2.true_cpi == e1.true_cpi, p
+        assert e2.accuracy == e1.accuracy, p
+        assert e2.speedup == e1.speedup, p
+        np.testing.assert_array_equal(e2.fingerprint, e1.fingerprint)
+
+
+def test_legacy_shim_matches_knowledge_base(blob_centers):
+    """universal_clustering warns and reproduces the KnowledgeBase path
+    bit-for-bit (same kmeans call, same fingerprint accumulation)."""
+    sigs, cpis, pids = [], [], []
+    for i, name in enumerate(["A", "B"]):
+        s, c = _blob_program(i, blob_centers)
+        sigs.append(s)
+        cpis.append(c)
+        pids += [name] * len(s)
+    X, C = np.concatenate(sigs), np.concatenate(cpis)
+    with pytest.warns(DeprecationWarning):
+        res = universal_clustering(X, pids, C, k=3, seed=0)
+    kb = KnowledgeBase(_filled_store(blob_centers, ["A", "B"])).build(
+        k=3, seed=0)
+    np.testing.assert_array_equal(res.rep_global_idx, kb.rep_global_idx)
+    for p in ("A", "B"):
+        np.testing.assert_array_equal(res.fingerprints[p],
+                                      kb.fingerprints[p])
+        assert res.est_cpi[p] == kb.est_cpi[p]
+        assert res.accuracy(p) == pytest.approx(
+            kb.estimate(p).accuracy, abs=1e-12)
+
+
+# ------------------------------------------------------- service facade
+
+@pytest.fixture(scope="module")
+def tiny_service():
+    """Real (untrained) pipeline over 3 traced programs — the full
+    ingest_blocks -> ingest_intervals -> build -> attach flow."""
+    from repro.data.asmgen import spec_programs
+    progs = spec_programs("int")[:3]
+    bt = block_table(progs)
+    per_prog = {p.name: trace_program(p, 16) for p in progs}
+    cpis = {n: np.array([interval_cpi(iv, bt, INORDER_CPU) for iv in ivs])
+            for n, ivs in per_prog.items()}
+    cfg = ServiceConfig(
+        bbe=BBEConfig(dim_embeds=(48, 8, 8, 8, 8, 8), num_layers=2,
+                      num_heads=2, bbe_dim=32, max_len=64),
+        sig=SignatureConfig(bbe_dim=32, d_model=32, sig_dim=16, max_set=48,
+                            num_heads=2),
+        k=6, store_min_capacity=16)
+    svc = SemanticBBVService.create(cfg)
+    svc.ingest_blocks(list(bt.values()))
+    return svc, progs, per_prog, cpis
+
+
+def test_service_ingest_build_attach_estimate(tiny_service):
+    svc, progs, per_prog, cpis = tiny_service
+    names = [p.name for p in progs]
+    for n in names[:-1]:
+        rows = svc.ingest_intervals(n, per_prog[n], cpis=cpis[n])
+        assert len(rows) == 16
+    kb = svc.build()
+    assert kb.k == 6 and kb.built
+    # reuse path: held-out program ingested AFTER build, then attached
+    svc.ingest_intervals(names[-1], per_prog[names[-1]],
+                         cpis=cpis[names[-1]])
+    f = svc.attach(names[-1])
+    np.testing.assert_allclose(f.sum(), 1.0, atol=1e-9)
+    for n in names:
+        est = svc.estimate(n)
+        assert est.program == n
+        assert np.isfinite(est.est_cpi) and est.est_cpi > 0
+        assert est.accuracy is not None
+        assert est.speedup > 1.0
+    # fingerprints are distributions over archetypes
+    assert set(kb.est_cpi) == set(names)
+
+
+def test_service_attach_intervals_without_ingest(tiny_service):
+    """attach_intervals fingerprints a program that never enters the
+    store (pure query); neither the store nor the knowledge base may
+    keep any footprint of it."""
+    svc, progs, per_prog, cpis = tiny_service
+    assert svc.kb.built
+    n_before = len(svc.store)
+    name = progs[0].name
+    f = svc.attach_intervals("ephemeral", per_prog[name])
+    assert len(svc.store) == n_before
+    np.testing.assert_allclose(f.sum(), 1.0, atol=1e-9)
+    np.testing.assert_allclose(f, svc.kb.fingerprints[name], atol=1e-9)
+    # pure query: no KB state, no avg_accuracy/save() skew, and a name
+    # collision with a stored program cannot shadow it
+    assert "ephemeral" not in svc.kb.fingerprints
+    assert "ephemeral" not in svc.kb.est_cpi
+    before = svc.kb.fingerprints[name].copy()
+    svc.attach_intervals(name, per_prog[name][:4])
+    np.testing.assert_array_equal(svc.kb.fingerprints[name], before)
+
+
+def test_service_save_load_roundtrip(tiny_service, tmp_path):
+    svc, progs, per_prog, cpis = tiny_service
+    out = str(tmp_path / "svc")
+    svc.save(out)
+    assert os.path.exists(os.path.join(out, "summary.json"))
+    svc2 = SemanticBBVService.load(out, svc.pipe)
+    assert svc2.store.programs == svc.store.programs
+    for n in svc.store.programs:
+        e1, e2 = svc.estimate(n), svc2.estimate(n)
+        assert e1.est_cpi == e2.est_cpi
+        assert e1.speedup == e2.speedup
+
+
+def test_pipeline_config_validation():
+    cfg = PipelineConfig(bbe=BBEConfig(dim_embeds=(48, 8, 8, 8, 8, 8),
+                                       num_layers=2, num_heads=2,
+                                       bbe_dim=32, max_len=64),
+                         sig=SignatureConfig(bbe_dim=16))
+    with pytest.raises(ValueError):
+        cfg.resolve()
+    pipe = SemanticBBVPipeline.from_config(PipelineConfig(
+        bbe=BBEConfig(dim_embeds=(48, 8, 8, 8, 8, 8), num_layers=2,
+                      num_heads=2, bbe_dim=32, max_len=64)))
+    assert pipe.sig_cfg.bbe_dim == 32

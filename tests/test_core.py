@@ -8,7 +8,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.bbe import BBEConfig, bbe_init, encode_bbe, pretrain_loss
 from repro.core.clustering import kmeans, representatives
-from repro.core.crossprog import speedup, universal_clustering
+from repro.core.crossprog import (
+    CrossProgramResult, speedup, universal_clustering,
+)
 from repro.core.losses import (
     cpi_consistency_loss, huber_loss, l2_normalize, triplet_loss,
 )
@@ -207,11 +209,38 @@ def test_universal_clustering_cross_program():
     sigs = np.concatenate([s1, s2])
     cpis = np.concatenate([c1, c2])
     pids = ["progA"] * len(c1) + ["progB"] * len(c2)
-    res = universal_clustering(sigs, pids, cpis, k=3, seed=0)
+    with pytest.warns(DeprecationWarning):   # shim over repro.api
+        res = universal_clustering(sigs, pids, cpis, k=3, seed=0)
     assert res.avg_accuracy > 0.97
     for p in ("progA", "progB"):
         np.testing.assert_allclose(res.fingerprints[p].sum(), 1.0, atol=1e-6)
     assert speedup(len(cpis), 3) == pytest.approx(len(cpis) / 3)
+
+
+def test_accuracy_clamped_for_degenerate_true_cpi():
+    """Regression: zero/near-zero true CPI used to divide by ~0 and
+    yield -inf/NaN accuracy; it must clamp to a finite [0, 1] value."""
+    from repro.core.crossprog import cpi_accuracy
+    res = CrossProgramResult(
+        k=1, rep_global_idx=np.array([0]), rep_program=["p"],
+        rep_cpi=np.array([1.0]), fingerprints={"p": np.array([1.0])},
+        est_cpi={"p": 1.0, "q": 2.0}, true_cpi={"p": 0.0, "q": 1e-15})
+    for prog in ("p", "q"):
+        a = res.accuracy(prog)
+        assert np.isfinite(a) and 0.0 <= a <= 1.0
+    assert np.isfinite(res.avg_accuracy)
+    assert cpi_accuracy(2.0, 2.0) == 1.0
+    assert cpi_accuracy(5.0, 1.0) == 0.0     # clipped, never negative
+    assert cpi_accuracy(1.05, 1.0) == pytest.approx(0.95)
+
+
+def test_speedup_weight_aware():
+    """Scalars keep the legacy uniform-interval semantics; arrays of
+    per-interval instruction counts give the weight-aware factor."""
+    assert speedup(100, 4) == pytest.approx(25.0)
+    w = np.array([1e6, 2e6, 7e6])
+    assert speedup(w, w[[2]]) == pytest.approx(10.0 / 7.0)
+    assert speedup(w, w) == pytest.approx(1.0)
 
 
 def test_classic_bbv_matrix_shape():

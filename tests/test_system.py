@@ -74,22 +74,47 @@ def test_simpoint_with_semanticbbv_beats_random(world):
 
 
 def test_cross_program_workflow(world):
-    """Fig 5/6 workflow: universal clustering over pooled signatures."""
+    """Fig 5/6 workflow through the service API: ingest all programs,
+    build the archetype base, estimate each program's CPI."""
+    from repro.api import SemanticBBVService
+    progs, bt, per_prog, cpis, pipe = world
+    svc = SemanticBBVService.from_pipeline(pipe)
+    svc.ingest_blocks(list(bt.values()))
+    for p in progs:
+        svc.ingest_intervals(p.name, per_prog[p.name], cpis=cpis[p.name])
+    kb = svc.build(k=8, seed=0)
+    assert set(kb.est_cpi) == {p.name for p in progs}
+    # every program's fingerprint is a distribution over the archetypes
+    for p in progs:
+        est = svc.estimate(p.name)
+        np.testing.assert_allclose(est.fingerprint.sum(), 1.0, atol=1e-6)
+        assert est.speedup > 1.0
+    assert kb.avg_accuracy > 0.3   # untrained signature: structure only
+
+
+def test_cross_program_legacy_shim_matches_service(world):
+    """The deprecated one-shot universal_clustering must agree with the
+    incremental store + knowledge-base path on the same pooled data."""
+    from repro.api import KnowledgeBase, SignatureStore
     progs, bt, per_prog, cpis, pipe = world
     table = pipe.encode_blocks(list(bt.values()))
+    store = SignatureStore(pipe.sig_cfg.sig_dim)
     sigs, pids, all_cpi = [], [], []
     for p in progs:
         s = pipe.interval_signatures(per_prog[p.name], table)
+        store.add(p.name, s, cpis=cpis[p.name])
         sigs.append(s)
         pids += [p.name] * len(s)
         all_cpi.append(cpis[p.name])
-    res = universal_clustering(np.concatenate(sigs), pids,
-                               np.concatenate(all_cpi), k=8, seed=0)
-    assert set(res.est_cpi) == {p.name for p in progs}
-    # every program's fingerprint is a distribution over the archetypes
-    for f in res.fingerprints.values():
-        np.testing.assert_allclose(f.sum(), 1.0, atol=1e-6)
-    assert res.avg_accuracy > 0.3  # untrained signature: structure only
+    with pytest.warns(DeprecationWarning):
+        res = universal_clustering(np.concatenate(sigs), pids,
+                                   np.concatenate(all_cpi), k=8, seed=0)
+    kb = KnowledgeBase(store).build(k=8, seed=0)
+    np.testing.assert_array_equal(res.rep_global_idx, kb.rep_global_idx)
+    for p in progs:
+        np.testing.assert_array_equal(res.fingerprints[p.name],
+                                      kb.fingerprints[p.name])
+        assert res.est_cpi[p.name] == kb.est_cpi[p.name]
 
 
 def test_vectorized_batch_sets_matches_loop(world):
