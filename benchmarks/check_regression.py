@@ -1,0 +1,149 @@
+"""Benchmark-trajectory regression gate (the CI `bench-gate` job).
+
+Compares the fresh benchmark JSONs a CI run produced under
+artifacts/bench/ against the committed baselines under
+benchmarks/baselines/ and fails (exit 1) when
+
+  * a baseline suite has no fresh counterpart (a benchmark silently
+    stopped running), or
+  * a wall-time metric present in the baseline is missing from the
+    fresh record (a timing silently disappeared), or
+  * any wall-time metric regressed by more than the threshold
+    (default: fresh > 1.25x baseline).
+
+Wall-time metrics are numeric keys ending in `_us` or `_s`. Records
+carry their regime (`backend` + `pallas_mode`/`kernel_mode`); when the
+fresh regime differs from the baseline's (e.g. a TPU runner vs the CPU
+baseline) the suite's timings are skipped rather than nonsensically
+compared — the gate only ever judges like against like.
+
+Refreshing baselines: download the `bench-json-*` artifact from a green
+main-branch CI run, copy the JSONs over benchmarks/baselines/, and
+commit them (see README "CI gates").
+
+Usage:
+    python benchmarks/check_regression.py \
+        [--baseline benchmarks/baselines] [--fresh artifacts/bench] \
+        [--threshold 1.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+DEFAULT_THRESHOLD = 1.25
+_REGIME_KEYS = ("backend", "pallas_mode", "kernel_mode")
+
+
+def _is_walltime(key: str, value) -> bool:
+    return (isinstance(value, (int, float)) and not isinstance(value, bool)
+            and (key.endswith("_us") or key.endswith("_s")))
+
+
+def _regime(record: Dict) -> Tuple:
+    return tuple(record.get(k) for k in _REGIME_KEYS)
+
+
+def compare_suite(name: str, baseline: Dict, fresh: Dict,
+                  threshold: float
+                  ) -> Tuple[List[str], List[str], int]:
+    """-> (failures, report lines, metrics compared) for one suite."""
+    failures: List[str] = []
+    report: List[str] = []
+    compared = 0
+    if _regime(baseline) != _regime(fresh):
+        report.append(
+            f"  {name}: regime mismatch (baseline {_regime(baseline)} vs "
+            f"fresh {_regime(fresh)}) — timings skipped")
+        return failures, report, compared
+    for key, base_val in sorted(baseline.items()):
+        if not _is_walltime(key, base_val):
+            continue
+        if key not in fresh:
+            failures.append(f"{name}: wall-time metric {key!r} missing "
+                            "from the fresh record")
+            continue
+        fresh_val = fresh[key]
+        if not _is_walltime(key, fresh_val):
+            failures.append(f"{name}: {key!r} is no longer numeric "
+                            f"({fresh_val!r})")
+            continue
+        compared += 1
+        ratio = (fresh_val / base_val) if base_val > 0 else float("inf")
+        line = (f"  {name}.{key}: {base_val:.0f} -> {fresh_val:.0f} "
+                f"({ratio:.2f}x)")
+        if ratio > threshold:
+            failures.append(
+                f"{name}: {key} regressed {ratio:.2f}x "
+                f"(baseline {base_val:.0f}, fresh {fresh_val:.0f}, "
+                f"threshold {threshold:.2f}x)")
+            line += "  REGRESSION"
+        report.append(line)
+    return failures, report, compared
+
+
+def check(baseline_dir: str, fresh_dir: str,
+          threshold: float = DEFAULT_THRESHOLD
+          ) -> Tuple[List[str], List[str]]:
+    """Compare every baseline suite; -> (failures, report lines)."""
+    failures: List[str] = []
+    report: List[str] = []
+    suites = sorted(f for f in os.listdir(baseline_dir)
+                    if f.endswith(".json"))
+    if not suites:
+        failures.append(f"no baseline suites under {baseline_dir}")
+        return failures, report
+    compared = 0
+    for fname in suites:
+        name = fname[:-len(".json")]
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(fresh_path):
+            failures.append(f"{name}: fresh benchmark JSON missing "
+                            f"({fresh_path}) — did the suite run?")
+            continue
+        with open(os.path.join(baseline_dir, fname)) as f:
+            baseline = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        fails, lines, n = compare_suite(name, baseline, fresh, threshold)
+        failures.extend(fails)
+        report.extend(lines)
+        compared += n
+    if compared == 0 and not failures:
+        # every suite hit the regime skip (or had no wall-time keys):
+        # an always-green gate that compares nothing is a silently
+        # disabled gate — fail loudly so regime-string drift is caught
+        failures.append(
+            "no wall-time metrics were compared at all (regime mismatch "
+            "on every suite?) — the gate would be silently disabled; "
+            "refresh benchmarks/baselines/ for this runner's regime")
+    return failures, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=os.path.join(
+        os.path.dirname(__file__), "baselines"))
+    ap.add_argument("--fresh", default=os.path.join("artifacts", "bench"))
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    args = ap.parse_args(argv)
+
+    failures, report = check(args.baseline, args.fresh, args.threshold)
+    print(f"bench-gate: {args.fresh} vs {args.baseline} "
+          f"(threshold {args.threshold:.2f}x)")
+    for line in report:
+        print(line)
+    if failures:
+        print(f"\nFAIL ({len(failures)}):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("OK — no wall-time regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

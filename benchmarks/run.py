@@ -18,6 +18,7 @@ def main() -> None:
     import benchmarks.fig6_crossprogram as fig6
     import benchmarks.fig7_adaptation as fig7
     import benchmarks.framework_throughput as thr
+    import benchmarks.kmeans_build as kmeans_build
     import benchmarks.set_attention_kernel as setattn
     import benchmarks.table1_embedding_params as t1
     import benchmarks.table2_bcsd as t2
@@ -30,8 +31,16 @@ def main() -> None:
         "fig7": fig7.run,
         "throughput": thr.run,
         "set_attn": setattn.run,
+        "kmeans_build": kmeans_build.run,
     }
-    want = [a for a in sys.argv[1:] if a in suites] or list(suites)
+    unknown = [a for a in sys.argv[1:] if a not in suites]
+    if unknown:
+        # a typo'd suite name must not silently run nothing — CI bench
+        # steps depend on a non-zero exit to stay trustworthy
+        print(f"unknown suite(s): {', '.join(unknown)}; "
+              f"available: {', '.join(suites)}", file=sys.stderr)
+        raise SystemExit(2)
+    want = list(sys.argv[1:]) or list(suites)
     for name in want:
         t0 = time.monotonic()
         rows = suites[name]()

@@ -1,0 +1,66 @@
+"""Reload a saved knowledge base in a FRESH process and assert the
+estimates are bit-identical to the in-process results recorded in
+`summary.json` at save time — the save/load contract of `repro.api`.
+
+The CI api-smoke job runs this right after
+`cross_program_estimation.py --tiny --save DIR` in a separate python
+invocation, so the check cannot be satisfied by in-memory state: the
+store + knowledge-base checkpoints on disk must reproduce every
+estimate down to the last bit (JSON floats round-trip exactly via
+shortest-repr, so `==` is a true bitwise comparison).
+
+    PYTHONPATH=src python examples/verify_kb_reload.py DIR
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import KnowledgeBase, SignatureStore
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("directory",
+                    help="directory a SemanticBBVService.save() produced")
+    args = ap.parse_args(argv)
+
+    with open(os.path.join(args.directory, "summary.json")) as f:
+        summary = json.load(f)
+    saved = summary.get("estimates")
+    if not saved:
+        print(f"{args.directory}/summary.json records no estimates "
+              "(was the knowledge base built before save?)",
+              file=sys.stderr)
+        return 2
+
+    store = SignatureStore.load(os.path.join(args.directory, "store"))
+    kb = KnowledgeBase.load(os.path.join(args.directory, "knowledge"),
+                            store)
+    mismatches = []
+    for program, want in sorted(saved.items()):
+        est = kb.estimate(program)
+        got = {"est_cpi": est.est_cpi, "true_cpi": est.true_cpi,
+               "accuracy": est.accuracy}
+        for field, want_val in want.items():
+            if got[field] != want_val:
+                mismatches.append(
+                    f"{program}.{field}: reloaded {got[field]!r} != "
+                    f"saved {want_val!r}")
+        print(f"  {program}: est_cpi={est.est_cpi!r} "
+              f"accuracy={est.accuracy!r}")
+    if mismatches:
+        print(f"\nFAIL — reload is not bit-identical "
+              f"({len(mismatches)}):", file=sys.stderr)
+        for m in mismatches:
+            print(f"  {m}", file=sys.stderr)
+        return 1
+    print(f"OK — {len(saved)} programs bit-identical after "
+          "fresh-process reload")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,14 +3,14 @@
 #   knowledge.py  KnowledgeBase: build/attach/estimate over archetypes
 #   service.py    SemanticBBVService facade + typed ServiceConfig
 from repro.api.knowledge import (
-    ASSIGN_IMPLS, CPIEstimate, KnowledgeBase, assign_signatures,
-    resolve_assign_impl,
+    ASSIGN_IMPLS, BUILD_IMPLS, CPIEstimate, KnowledgeBase,
+    assign_signatures, resolve_assign_impl, resolve_build_impl,
 )
 from repro.api.service import SemanticBBVService, ServiceConfig
 from repro.api.store import SignatureStore
 
 __all__ = [
-    "ASSIGN_IMPLS", "CPIEstimate", "KnowledgeBase", "SemanticBBVService",
-    "ServiceConfig", "SignatureStore", "assign_signatures",
-    "resolve_assign_impl",
+    "ASSIGN_IMPLS", "BUILD_IMPLS", "CPIEstimate", "KnowledgeBase",
+    "SemanticBBVService", "ServiceConfig", "SignatureStore",
+    "assign_signatures", "resolve_assign_impl", "resolve_build_impl",
 ]

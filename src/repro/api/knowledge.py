@@ -29,19 +29,28 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.api.store import SignatureStore, _capacity_for
-from repro.core.clustering import kmeans, representatives
+from repro.core.clustering import kmeans, kmeans_device, representatives
 from repro.core.crossprog import cpi_accuracy, speedup
 from repro.train.checkpoint import (
     latest_checkpoint, restore_checkpoint, save_checkpoint,
 )
 
 ASSIGN_IMPLS = ("auto", "reference", "numpy", "pallas", "pallas_interpret")
+
+# build() backend: where the universal-clustering restart loop runs.
+#   "host"           legacy numpy round-trip per restart (parity anchor)
+#   "device"         one jitted restart loop over the store's padded
+#                    device matrix (jnp assignment/segment-reduce)
+#   "device_kernel"  same loop with the Pallas kmeans kernels inside
+#                    (compiled on TPU, interpreter elsewhere)
+#   "auto"           "device_kernel" on TPU, "device" elsewhere
+BUILD_IMPLS = ("auto", "host", "device", "device_kernel")
 
 
 def resolve_assign_impl(impl: str) -> str:
@@ -50,6 +59,16 @@ def resolve_assign_impl(impl: str) -> str:
                          f"got {impl!r}")
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return impl
+
+
+def resolve_build_impl(impl: str) -> str:
+    if impl not in BUILD_IMPLS:
+        raise ValueError(f"build_impl must be one of {BUILD_IMPLS}, "
+                         f"got {impl!r}")
+    if impl == "auto":
+        return ("device_kernel" if jax.default_backend() == "tpu"
+                else "device")
     return impl
 
 
@@ -108,9 +127,11 @@ class KnowledgeBase:
     the store."""
 
     def __init__(self, store: SignatureStore, *,
-                 assign_impl: str = "reference"):
+                 assign_impl: str = "reference",
+                 build_impl: str = "host"):
         self.store = store
         self.assign_impl = assign_impl
+        self.build_impl = build_impl
         self.k = 0
         self.seed = 0
         self.archetypes: Optional[np.ndarray] = None   # (k, d)
@@ -138,20 +159,36 @@ class KnowledgeBase:
                                "attach/estimate queries")
 
     # -------------------------------------------------------------- build
-    def build(self, k: int = 14, seed: int = 0) -> "KnowledgeBase":
+    def build(self, k: int = 14, seed: int = 0, *,
+              impl: Optional[str] = None, mesh=None) -> "KnowledgeBase":
         """Universal clustering over every row currently in the store.
 
-        Uses the same `kmeans` call (++ init, restarts) as the legacy
+        Uses the same restart keys and ++ init as the legacy
         `universal_clustering`, and fingerprints the already-stored
         programs from k-means' own assignment — bit-compatible with the
         one-shot path. Programs ingested AFTER build are attached
         against the frozen archetypes (`attach`), never re-clustered.
+
+        `impl` (default: the base's `build_impl`) picks where the
+        restart loop runs (see BUILD_IMPLS): "host" is the legacy
+        per-restart numpy round-trip; "device"/"device_kernel" run ALL
+        restarts in one jitted call directly over the store's padded
+        `device_matrix` (cluster-aligned compatible with "host"),
+        optionally sharded over `mesh`'s data axes.
         """
         if len(self.store) == 0:
             raise RuntimeError("cannot build a KnowledgeBase over an "
                                "empty SignatureStore")
+        impl = resolve_build_impl(impl or self.build_impl)
+        self.build_impl = impl   # persist the impl actually used (save())
         x = np.asarray(self.store.signatures, np.float32)
-        cents, assign, _ = kmeans(x, k, seed=seed)
+        if impl == "host":
+            cents, assign, _ = kmeans(x, k, seed=seed)
+        else:
+            cents, assign, _ = kmeans_device(
+                self.store.device_matrix, k, seed=seed,
+                use_kernel=(impl == "device_kernel"),
+                n_valid=len(self.store), mesh=mesh)
         reps = representatives(x, cents, assign)
         self.k = int(cents.shape[0])
         self.seed = seed
@@ -244,6 +281,22 @@ class KnowledgeBase:
             a, np.ones(len(a)) if weights is None else weights)
         return f
 
+    def attach_many(self, programs: Sequence[str]
+                    ) -> Dict[str, np.ndarray]:
+        """Fingerprint MANY stored programs in one batched device pass.
+
+        The whole padded store is assigned against the frozen archetypes
+        once (`_all_row_assign`, one kernel call at the store's static
+        capacity shape); every requested program is then recorded from
+        its slice of that shared assignment. Bit-identical to calling
+        `attach(p)` per program, without N cache lookups racing store
+        versions — the multi-tenant ingest-then-attach path.
+        """
+        self._require_built()
+        row_assign = self._all_row_assign()
+        return {p: self._record(p, row_assign[self.store.rows_for(p)])
+                for p in programs}
+
     def _all_row_assign(self) -> np.ndarray:
         """Assignment of every valid store row, computed over the padded
         device-resident matrix (static shape per capacity level)."""
@@ -295,6 +348,7 @@ class KnowledgeBase:
         meta = {
             "k": self.k, "seed": self.seed,
             "assign_impl": self.assign_impl,
+            "build_impl": self.build_impl,
             "rep_program": self.rep_program,
             "built_version": self._built_version,
             "fingerprints": {p: np.asarray(f).tolist()
@@ -320,7 +374,8 @@ class KnowledgeBase:
                       "rep_global_idx")
         }
         tree, _, meta = restore_checkpoint(path, template)
-        kb = cls(store, assign_impl=meta["assign_impl"])
+        kb = cls(store, assign_impl=meta["assign_impl"],
+                 build_impl=meta.get("build_impl", "host"))
         kb.k = int(meta["k"])
         kb.seed = int(meta["seed"])
         kb.archetypes = np.asarray(tree["archetypes"], np.float32)

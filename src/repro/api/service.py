@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Dict, Optional, Sequence
+from typing import Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -51,6 +51,7 @@ class ServiceConfig:
     sig: Optional[SignatureConfig] = None
     impl: str = "xla"                 # set-attention: xla|pallas|pallas_interpret
     assign_impl: str = "reference"    # nearest-centroid: see knowledge.ASSIGN_IMPLS
+    build_impl: str = "host"          # kmeans restart loop: see knowledge.BUILD_IMPLS
     k: int = 14                       # universal archetypes (paper: 14)
     kmeans_seed: int = 0
     encode_batch: int = 256           # Stage-1 block batch
@@ -77,7 +78,8 @@ class SemanticBBVService:
             pipeline.sig_cfg.sig_dim,
             min_capacity=self.cfg.store_min_capacity)
         self.kb = kb if kb is not None else KnowledgeBase(
-            self.store, assign_impl=self.cfg.assign_impl)
+            self.store, assign_impl=self.cfg.assign_impl,
+            build_impl=self.cfg.build_impl)
 
     # ------------------------------------------------------------ factory
     @classmethod
@@ -126,6 +128,38 @@ class SemanticBBVService:
         """Fingerprint an ingested-after-build program against the
         frozen archetypes (batched nearest-centroid, no re-clustering)."""
         return self.kb.attach(program)
+
+    def attach_many(self, programs,
+                    cpis: Optional[Dict[str, Sequence[float]]] = None
+                    ) -> Dict[str, np.ndarray]:
+        """Multi-tenant attach: fingerprint MANY programs with one
+        batched device pass instead of N per-program attach calls.
+
+        `programs` is either a sequence of already-ingested program
+        names, or a mapping {program: intervals} to ingest-and-attach:
+        signature generation is pipelined across ALL programs in one
+        padded batch stream (`interval_signatures_many`), the rows land
+        in the store via one `add_many` (single capacity growth, single
+        version bump), and the whole padded store is then assigned
+        against the frozen archetypes in ONE nearest-centroid call.
+        Bit-identical fingerprints to sequential `attach`.
+        """
+        if isinstance(programs, Mapping):
+            # fail BEFORE mutating the append-only store: a built check
+            # after ingest would leave orphan rows that a retry
+            # double-ingests
+            self.kb._require_built()
+            by_prog = {p: list(ivs) for p, ivs in programs.items()}
+            sigs = self.pipe.interval_signatures_many(
+                by_prog, self.bbe_table, self.cfg.signature_batch)
+            self.store.add_many([
+                (p, sigs[p], [iv.num_instrs for iv in ivs],
+                 None if cpis is None else cpis.get(p))
+                for p, ivs in by_prog.items()])
+            names = list(by_prog)
+        else:
+            names = list(programs)
+        return self.kb.attach_many(names)
 
     def attach_intervals(self, program: str, intervals: Sequence
                          ) -> np.ndarray:

@@ -99,15 +99,7 @@ class SignatureStore:
         self._sigs, self._weights, self._cpis = sigs, weights, cpis
         self._device = None
 
-    def add(self, program: str, signatures: np.ndarray,
-            weights: Optional[Sequence[float]] = None,
-            cpis: Optional[Sequence[float]] = None) -> np.ndarray:
-        """Append one program's interval rows; returns their row indices.
-
-        A program may be added in several calls (streaming ingest); rows
-        accumulate. Signatures are stored as float32 — the dtype every
-        query path already uses.
-        """
+    def _validate(self, signatures, weights, cpis):
         sigs = np.asarray(signatures, np.float32)
         if sigs.ndim != 2 or sigs.shape[1] != self.sig_dim:
             raise ValueError(
@@ -119,7 +111,12 @@ class SignatureStore:
              else np.asarray(cpis, np.float32))
         if w.shape != (b,) or c.shape != (b,):
             raise ValueError("weights/cpis must be 1-D of len(signatures)")
-        self._grow_to(self._n + b)
+        return sigs, w, c
+
+    def _append(self, program, sigs, w, c) -> np.ndarray:
+        """Write validated rows into already-grown buffers (no version
+        bump — callers batch that)."""
+        b = sigs.shape[0]
         rows = np.arange(self._n, self._n + b)
         self._sigs[rows] = sigs
         self._weights[rows] = w
@@ -127,9 +124,52 @@ class SignatureStore:
         self._program_of_row.extend([program] * b)
         self._program_rows.setdefault(program, []).extend(rows.tolist())
         self._n += b
+        return rows
+
+    def add(self, program: str, signatures: np.ndarray,
+            weights: Optional[Sequence[float]] = None,
+            cpis: Optional[Sequence[float]] = None) -> np.ndarray:
+        """Append one program's interval rows; returns their row indices.
+
+        A program may be added in several calls (streaming ingest); rows
+        accumulate. Signatures are stored as float32 — the dtype every
+        query path already uses.
+        """
+        sigs, w, c = self._validate(signatures, weights, cpis)
+        self._grow_to(self._n + sigs.shape[0])
+        rows = self._append(program, sigs, w, c)
         self.version += 1
         self._device = None
         return rows
+
+    def add_many(self, items: Sequence[Tuple]) -> Dict[str, np.ndarray]:
+        """Batched ingest: `items` is a sequence of (program, signatures[,
+        weights[, cpis]]) tuples. All inputs are validated up front,
+        capacity grows ONCE for the total row count (one buffer copy
+        instead of one per doubling), and `version` bumps once — so one
+        downstream whole-store assignment pass covers the entire batch.
+        Returns {program: new row indices} (repeated programs accumulate).
+        """
+        validated = []
+        for item in items:
+            program, sigs = item[0], item[1]
+            weights = item[2] if len(item) > 2 else None
+            cpis = item[3] if len(item) > 3 else None
+            validated.append((program, *self._validate(sigs, weights, cpis)))
+        if not validated:
+            return {}
+        # zero-row programs still register (matching `add`), so a later
+        # rows_for/attach sees them instead of raising KeyError
+        total = sum(v[1].shape[0] for v in validated)
+        self._grow_to(self._n + total)
+        out: Dict[str, np.ndarray] = {}
+        for program, sigs, w, c in validated:
+            rows = self._append(program, sigs, w, c)
+            out[program] = (rows if program not in out
+                            else np.concatenate([out[program], rows]))
+        self.version += 1
+        self._device = None
+        return out
 
     # ------------------------------------------------------------- views
     def rows_for(self, program: str) -> np.ndarray:

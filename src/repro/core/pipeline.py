@@ -385,6 +385,28 @@ class SemanticBBVPipeline:
         sigs, _ = self._run_signature(intervals, bbe_table, batch)
         return sigs
 
+    def interval_signatures_many(self, intervals_by_program,
+                                 bbe_table, batch: int = 512
+                                 ) -> Dict[str, np.ndarray]:
+        """Signatures for SEVERAL programs in one pipelined batch stream.
+
+        Intervals are concatenated across programs before batching, so
+        the static-shape padding penalty of a partial batch is paid once
+        at the end of the stream — not once per program — and the BBE
+        matrix upload plus jit cache are shared across the whole call.
+        Returns {program: (n_p, sig_dim)} in input order; bit-identical
+        to per-program `interval_signatures` calls.
+        """
+        names = list(intervals_by_program)
+        flat = [iv for n in names for iv in intervals_by_program[n]]
+        sigs = self.interval_signatures(flat, bbe_table, batch)
+        out, off = {}, 0
+        for n in names:
+            count = len(intervals_by_program[n])
+            out[n] = sigs[off:off + count]
+            off += count
+        return out
+
     def predict_interval_cpi(self, intervals, bbe_table, batch: int = 512
                              ) -> np.ndarray:
         """Same bbe_table snapshot semantics as `interval_signatures`."""

@@ -1,2 +1,4 @@
-from repro.kernels.kmeans_assign.ops import kmeans_assign
-from repro.kernels.kmeans_assign.ref import kmeans_assign_reference
+from repro.kernels.kmeans_assign.ops import kmeans_assign, kmeans_update
+from repro.kernels.kmeans_assign.ref import (
+    kmeans_assign_reference, kmeans_update_reference,
+)

@@ -1,15 +1,21 @@
-"""Tiled nearest-centroid Pallas TPU kernel for universal clustering.
+"""Tiled nearest-centroid Pallas TPU kernels for universal clustering.
 
 The cross-program experiment assigns 100k+ interval signatures to K
-universal archetypes every k-means iteration. The hot op is the
-(N,d)×(d,K) distance matmul + row argmin. Kernel: N is tiled in
-`block_n` rows held in VMEM; the centroid table (K ≤ a few hundred, d ≤
-1k) stays fully VMEM-resident across the whole grid; the -2·x·cᵀ term
-runs on the MXU and the argmin reduces in VREGs — no HBM round-trip for
-the (N,K) distance matrix.
+universal archetypes every k-means iteration. Two kernels share the
+distance tile math ((N,d)×(d,K) matmul + row argmin, scores in VMEM):
+
+  `kmeans_assign_pallas`   assignment only — per-row (argmin, min-dist).
+  `kmeans_update_pallas`   one full k-means step: assignment fused with
+      the segment reduction the centroid update needs. Per grid step the
+      block's rows are one-hot scattered into fp32 (K,d) sum / (K,)
+      count accumulators that live in the output blocks (every step maps
+      to block 0, "arbitrary" semantics), plus the masked inertia — so
+      the restart loop never materializes the (N,K) one-hot matrix in
+      HBM nor round-trips per-row assignments to the host.
 
 Grid: (N // block_n,). Blocks: x (block_n, d); c (K, d) constant;
-outputs assign (block_n,) int32 and dist2 (block_n,) f32.
+assignment outputs are (block_n,) int32/f32; update outputs are the
+(K, d) sums, (K,) counts and (1,) inertia accumulators.
 """
 from __future__ import annotations
 
@@ -63,3 +69,70 @@ def kmeans_assign_pallas(x, centroids, *, block_n: int = 1024,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
     )(x, centroids)
+
+
+def _kmeans_update_kernel(x_ref, c_ref, v_ref, s_ref, n_ref, i_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        i_ref[...] = jnp.zeros_like(i_ref)
+
+    x = x_ref[...].astype(jnp.float32)                      # (Bn, d)
+    c = c_ref[...].astype(jnp.float32)                      # (K, d)
+    v = v_ref[...].astype(jnp.float32)                      # (Bn,)
+    x2 = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    c2 = jnp.sum(jnp.square(c), axis=-1)
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d2 = x2 - 2.0 * xc + c2[None, :]                        # (Bn, K)
+    a = jnp.argmin(d2, axis=-1)                             # (Bn,)
+    K = c.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], K), 1)
+    onehot = jnp.where(a[:, None] == cols, 1.0, 0.0) * v[:, None]
+    s_ref[...] += jax.lax.dot_general(                      # (K, d)
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] += jnp.sum(onehot, axis=0)
+    i_ref[...] += jnp.sum(jnp.min(d2, axis=-1) * v)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_update_pallas(x, centroids, valid, *, block_n: int = 1024,
+                         interpret: bool = False):
+    """One fused assignment + segment-reduce over the valid rows.
+
+    x: (N,d); centroids: (K,d); valid: (N,) mask (0 kills padded rows).
+    Returns (sums (K,d) f32, counts (K,) f32, inertia (1,) f32) — the
+    per-cluster weighted sums / member counts / total min-distance that
+    a k-means step needs. N % block_n == 0 (the wrapper pads).
+    """
+    N, d = x.shape
+    K = centroids.shape[0]
+    block_n = min(block_n, N)
+    assert N % block_n == 0
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        _kmeans_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((K, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((K, d), lambda i: (0, 0)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((K, d), jnp.float32),
+            jax.ShapeDtypeStruct((K,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(x, centroids, valid)

@@ -11,6 +11,7 @@ import pytest
 from repro.api import (
     CPIEstimate, KnowledgeBase, SemanticBBVService, ServiceConfig,
     SignatureStore, assign_signatures, resolve_assign_impl,
+    resolve_build_impl,
 )
 from repro.core.bbe import BBEConfig
 from repro.core.crossprog import cpi_accuracy, universal_clustering
@@ -140,6 +141,122 @@ def test_knowledge_base_attach_uses_kernel_impl(blob_centers):
                                   fingerprints["numpy"])
     np.testing.assert_array_equal(fingerprints["reference"],
                                   fingerprints["numpy"])
+
+
+# ---------------------------------------------------- on-device build
+
+def _align(kb, ref):
+    """Cluster-label bijection: archetype j of `kb` -> nearest archetype
+    of `ref` (k-means labelings are not canonical)."""
+    perm, _ = assign_signatures(kb.archetypes, ref.archetypes,
+                                impl="numpy")
+    assert sorted(perm.tolist()) == list(range(ref.k))
+    return perm
+
+
+@pytest.mark.parametrize("impl", ["device", "device_kernel"])
+def test_device_build_cluster_aligned_with_host(blob_centers, impl):
+    """Acceptance: build(impl="device"/"device_kernel") — the jitted
+    restart loop over the padded store matrix, Pallas kernels inside for
+    device_kernel — must be cluster-aligned bit-compatible with the
+    legacy host numpy path at tiny k."""
+    host = KnowledgeBase(_filled_store(blob_centers, ["A", "B"]),
+                         build_impl="host").build(k=3, seed=0)
+    dev = KnowledgeBase(_filled_store(blob_centers, ["A", "B"]),
+                        build_impl=impl).build(k=3, seed=0)
+    perm = _align(dev, host)
+    # identical membership (bit-compatible assignments up to labeling)
+    for p in ("A", "B"):
+        f = np.zeros(3)
+        np.add.at(f, perm, dev.fingerprints[p])
+        np.testing.assert_allclose(f, host.fingerprints[p], atol=1e-12,
+                                   err_msg=p)
+        assert dev.estimate(p).est_cpi == pytest.approx(
+            host.estimate(p).est_cpi, rel=1e-6)
+    # same representative intervals, module labeling
+    np.testing.assert_array_equal(np.sort(dev.rep_global_idx),
+                                  np.sort(host.rep_global_idx))
+    np.testing.assert_allclose(dev.archetypes, host.archetypes[perm],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_device_build_over_grown_padded_store(blob_centers):
+    """The device build consumes the pow2-capacity device matrix with a
+    pad tail; growing the store (new capacity level) must not leak
+    padded zero-rows into clusters or representatives."""
+    store = _filled_store(blob_centers, ["A", "B"])   # 150 rows, cap 256
+    assert store.capacity > len(store)
+    kb = KnowledgeBase(store, build_impl="device").build(k=3, seed=0)
+    assert (kb.rep_global_idx < len(store)).all()
+    assert kb._all_row_assign().shape == (len(store),)
+    for p in ("A", "B"):
+        np.testing.assert_allclose(kb.fingerprints[p].sum(), 1.0,
+                                   atol=1e-12)
+
+
+def test_resolve_build_impl():
+    assert resolve_build_impl("host") == "host"
+    expected = ("device_kernel" if jax.default_backend() == "tpu"
+                else "device")
+    assert resolve_build_impl("auto") == expected
+    with pytest.raises(ValueError):
+        resolve_build_impl("bogus")
+
+
+# ----------------------------------------------------------- attach_many
+
+def test_attach_many_matches_sequential_attach(blob_centers):
+    """Acceptance: one batched attach_many pass must produce the same
+    fingerprints and CPIEstimates as per-program attach calls."""
+    def fresh():
+        store = _filled_store(blob_centers, ["A", "B"])
+        kb = KnowledgeBase(store).build(k=3, seed=0)
+        items = []
+        for j, n in enumerate(["P", "Q", "R"]):
+            s, c = _blob_program(30 + j, blob_centers)
+            items.append((n, s, np.arange(len(s)) + 1.0, c))
+        return store, kb, items
+
+    store1, kb1, items = fresh()
+    rows = store1.add_many(items)
+    assert list(rows) == ["P", "Q", "R"]
+    many = kb1.attach_many(["P", "Q", "R"])
+
+    store2, kb2, _ = fresh()
+    for n, s, w, c in items:
+        store2.add(n, s, weights=w, cpis=c)
+    for n in ("P", "Q", "R"):
+        f_seq = kb2.attach(n)
+        np.testing.assert_array_equal(many[n], f_seq, err_msg=n)
+        e1, e2 = kb1.estimate(n), kb2.estimate(n)
+        assert e1.est_cpi == e2.est_cpi, n
+        assert e1.true_cpi == e2.true_cpi, n
+        assert e1.accuracy == e2.accuracy, n
+        assert e1.speedup == e2.speedup, n
+
+
+def test_add_many_single_version_bump(blob_centers):
+    store = SignatureStore(8, min_capacity=16)
+    s0, c0 = _blob_program(0, blob_centers)
+    store.add("A", s0, cpis=c0)
+    v = store.version
+    items = [("P", s0[:10]), ("Q", s0[10:30], np.ones(20) * 2.0),
+             ("P", s0[30:40])]                       # repeated program
+    rows = store.add_many(items)
+    assert store.version == v + 1                    # ONE bump
+    assert len(store) == 75 + 40
+    np.testing.assert_array_equal(rows["P"],
+                                  np.concatenate([np.arange(75, 85),
+                                                  np.arange(105, 115)]))
+    np.testing.assert_array_equal(store.rows_for("Q"),
+                                  np.arange(85, 105))
+    assert store.add_many([]) == {}
+    # zero-row programs register (same as add), so attach sees them
+    empty = store.add_many([("Z", np.zeros((0, 8), np.float32))])
+    assert empty["Z"].shape == (0,)
+    assert "Z" in store and store.rows_for("Z").shape == (0,)
+    with pytest.raises(ValueError):
+        store.add_many([("X", np.ones((2, 5), np.float32))])
 
 
 # --------------------------------------------------------- attach parity
@@ -382,6 +499,57 @@ def test_service_save_load_roundtrip(tiny_service, tmp_path):
         e1, e2 = svc.estimate(n), svc2.estimate(n)
         assert e1.est_cpi == e2.est_cpi
         assert e1.speedup == e2.speedup
+
+
+def test_service_attach_many_before_build_leaves_no_rows(blob_centers):
+    """Regression: the Mapping form must fail BEFORE ingesting — orphan
+    rows from a failed call would double-ingest on retry after build."""
+    svc = SemanticBBVService.create(ServiceConfig(k=3))
+    n_before = len(svc.store)
+    with pytest.raises(RuntimeError, match="build"):
+        svc.attach_many({"P": []})
+    assert len(svc.store) == n_before
+    assert svc.store.version == 0
+
+
+def test_service_attach_many_pipelined(tiny_service):
+    """Service-level attach_many({program: intervals}) must ingest via
+    one add_many + one batched assignment and match what sequential
+    ingest_intervals + attach produces on the same knowledge base.
+    (Runs after the facade tests above have ingested + built.)"""
+    svc, progs, per_prog, cpis = tiny_service
+    assert svc.kb.built
+    names = [p.name for p in progs]
+    # sequential oracle fingerprints from the already-attached programs
+    want = {n: svc.kb.fingerprints[n].copy() for n in names}
+    version_before = svc.store.version
+    many = svc.attach_many(
+        {f"{n}#clone": per_prog[n] for n in names},
+        cpis={f"{n}#clone": cpis[n] for n in names})
+    assert svc.store.version == version_before + 1   # one add_many bump
+    for n in names:
+        np.testing.assert_allclose(many[f"{n}#clone"], want[n],
+                                   atol=1e-9, err_msg=n)
+        e_clone = svc.estimate(f"{n}#clone")
+        e_orig = svc.estimate(n)
+        assert e_clone.est_cpi == pytest.approx(e_orig.est_cpi, rel=1e-9)
+    # name-sequence form re-attaches already-stored programs in one pass
+    again = svc.attach_many(names)
+    for n in names:
+        np.testing.assert_array_equal(again[n], svc.kb.fingerprints[n])
+
+
+def test_interval_signatures_many_bit_identical(tiny_service):
+    """Cross-program pipelined batching must not change any signature:
+    one concatenated stream == per-program calls, bit for bit."""
+    svc, progs, per_prog, _ = tiny_service
+    by_prog = {p.name: per_prog[p.name] for p in progs}
+    batch = svc.cfg.signature_batch
+    many = svc.pipe.interval_signatures_many(by_prog, svc.bbe_table,
+                                             batch)
+    for name, ivs in by_prog.items():
+        solo = svc.pipe.interval_signatures(ivs, svc.bbe_table, batch)
+        np.testing.assert_array_equal(many[name], solo, err_msg=name)
 
 
 def test_pipeline_config_validation():

@@ -1,0 +1,116 @@
+"""Unit tests for the CI bench-gate (benchmarks/check_regression.py):
+missing suites, missing metrics, threshold semantics, regime skips."""
+import json
+import os
+
+import pytest
+
+from benchmarks.check_regression import check, compare_suite, main
+
+
+def _write(directory, name, record):
+    os.makedirs(directory, exist_ok=True)
+    with open(os.path.join(directory, name + ".json"), "w") as f:
+        json.dump(record, f)
+
+
+BASE = {"backend": "cpu", "kernel_mode": "xla_jnp",
+        "host_build_us": 1000.0, "device_build_us": 100.0,
+        "device_speedup": 10.0, "config": {"n": 10}}
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    b, f = str(tmp_path / "baselines"), str(tmp_path / "fresh")
+    _write(b, "kmeans_build", BASE)
+    return b, f
+
+
+def test_identical_passes(dirs):
+    b, f = dirs
+    _write(f, "kmeans_build", BASE)
+    failures, report = check(b, f)
+    assert failures == []
+    assert any("1.00x" in line for line in report)
+
+
+def test_small_noise_within_threshold_passes(dirs):
+    b, f = dirs
+    fresh = dict(BASE, device_build_us=BASE["device_build_us"] * 1.2)
+    _write(f, "kmeans_build", fresh)
+    assert check(b, f, threshold=1.25)[0] == []
+
+
+def test_2x_slowdown_fails(dirs):
+    b, f = dirs
+    fresh = dict(BASE, device_build_us=BASE["device_build_us"] * 2.0)
+    _write(f, "kmeans_build", fresh)
+    failures, _ = check(b, f)
+    assert len(failures) == 1
+    assert "device_build_us" in failures[0]
+    assert "2.00x" in failures[0]
+
+
+def test_speedups_improvements_never_fail(dirs):
+    b, f = dirs
+    fresh = dict(BASE, device_build_us=1.0, host_build_us=1.0,
+                 device_speedup=1.0)   # ratios are not wall times
+    _write(f, "kmeans_build", fresh)
+    assert check(b, f)[0] == []
+
+
+def test_missing_suite_fails(dirs):
+    b, f = dirs
+    os.makedirs(f, exist_ok=True)      # fresh dir exists but is empty
+    failures, _ = check(b, f)
+    assert len(failures) == 1
+    assert "kmeans_build" in failures[0]
+    assert "missing" in failures[0]
+
+
+def test_missing_walltime_metric_fails(dirs):
+    b, f = dirs
+    fresh = {k: v for k, v in BASE.items() if k != "device_build_us"}
+    _write(f, "kmeans_build", fresh)
+    failures, _ = check(b, f)
+    assert len(failures) == 1
+    assert "device_build_us" in failures[0]
+
+
+def test_regime_mismatch_skips_not_fails():
+    baseline = dict(BASE)
+    fresh = dict(BASE, backend="tpu", kernel_mode="pallas_compiled",
+                 device_build_us=BASE["device_build_us"] * 50)
+    failures, report, compared = compare_suite("kmeans_build", baseline,
+                                               fresh, 1.25)
+    assert failures == []
+    assert compared == 0
+    assert any("regime mismatch" in line for line in report)
+
+
+def test_all_suites_regime_skipped_fails_check(dirs):
+    """An always-green gate that compares NOTHING is a silently disabled
+    gate: if every suite hits the regime skip, check() must fail."""
+    b, f = dirs
+    _write(f, "kmeans_build", dict(BASE, backend="tpu"))
+    failures, _ = check(b, f)
+    assert len(failures) == 1
+    assert "no wall-time metrics were compared" in failures[0]
+
+
+def test_empty_baseline_dir_fails(tmp_path):
+    b = str(tmp_path / "baselines")
+    os.makedirs(b)
+    failures, _ = check(b, str(tmp_path / "fresh"))
+    assert failures and "no baseline suites" in failures[0]
+
+
+def test_main_exit_codes(dirs, capsys):
+    b, f = dirs
+    _write(f, "kmeans_build", BASE)
+    assert main(["--baseline", b, "--fresh", f]) == 0
+    _write(f, "kmeans_build",
+           dict(BASE, host_build_us=BASE["host_build_us"] * 3))
+    assert main(["--baseline", b, "--fresh", f]) == 1
+    out = capsys.readouterr()
+    assert "REGRESSION" in out.out

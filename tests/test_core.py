@@ -1,5 +1,7 @@
 """SemanticBBV core: losses, clustering, simpoint, cross-program,
 order-invariance of the Stage-2 signature."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +9,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bbe import BBEConfig, bbe_init, encode_bbe, pretrain_loss
-from repro.core.clustering import kmeans, representatives
+from repro.core.clustering import kmeans, kmeans_device, representatives
 from repro.core.crossprog import (
     CrossProgramResult, speedup, universal_clustering,
 )
@@ -173,6 +175,94 @@ def test_representatives_are_members():
     for c, r in enumerate(reps):
         if (assign == c).any():
             assert assign[r] == c
+
+
+def test_representatives_match_per_cluster_loop():
+    """The segment-reduce form must reproduce the per-cluster loop it
+    replaced: closest member per cluster, lowest-row tie-break, global
+    argmin fallback for empty clusters."""
+    rng = np.random.RandomState(2)
+    x = rng.randn(200, 6).astype(np.float32)
+    k = 7
+    cents = rng.randn(k, 6).astype(np.float32)
+    assign = rng.randint(0, k - 2, 200)          # clusters k-2, k-1 empty
+    reps = representatives(x, cents, assign)
+    d2_all = ((x[:, None, :].astype(np.float64)
+               - cents[None, :, :].astype(np.float64)) ** 2).sum(-1)
+    for c in range(k):
+        members = np.where(assign == c)[0]
+        if len(members) == 0:
+            want = int(np.argmin(d2_all[:, c]))
+        else:
+            want = int(members[np.argmin(d2_all[members, c])])
+        assert reps[c] == want, c
+
+
+def _blob_world(seed=0, k=4, d=8, n_per=50):
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(k, d) * 6
+    return np.concatenate(
+        [c + rng.randn(n_per, d) * 0.05 for c in centers]
+    ).astype(np.float32)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_kmeans_device_matches_host(use_kernel):
+    """Acceptance: the one-dispatch device restart loop (optionally with
+    the Pallas kernels inside) is cluster-aligned bit-compatible with
+    the legacy host wrapper at tiny k, including over a padded matrix
+    with an n_valid mask."""
+    x = _blob_world()
+    c_h, a_h, i_h = kmeans(x, 4, seed=1)
+    xp = np.concatenate([x, np.zeros((56, x.shape[1]), np.float32)])
+    c_d, a_d, i_d = kmeans_device(xp, 4, seed=1, n_valid=len(x),
+                                  use_kernel=use_kernel)
+    assert a_d.shape == (len(x),)
+    perm = ((c_d[:, None, :] - c_h[None, :, :]) ** 2).sum(-1).argmin(1)
+    assert sorted(perm.tolist()) == [0, 1, 2, 3]
+    np.testing.assert_array_equal(perm[a_d], a_h)
+    np.testing.assert_allclose(i_d, i_h, rtol=1e-5)
+    np.testing.assert_allclose(c_d, c_h[perm], rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_device_sharded_subprocess():
+    """Data-axis sharding: the device build under a 4-way ("data",
+    "model") mesh — jnp path via GSPMD, kernel path via shard_map +
+    psum'd partials — must stay cluster-aligned with the host build.
+    Runs in a subprocess because host device count is fixed at jax
+    import (conftest keeps the main process single-device)."""
+    import subprocess
+    import sys
+    code = """
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core.clustering import kmeans, kmeans_device
+assert jax.device_count() == 4
+mesh = Mesh(np.array(jax.devices()).reshape(4, 1), ("data", "model"))
+rng = np.random.RandomState(0)
+centers = rng.randn(4, 8) * 6
+x = np.concatenate([c + rng.randn(50, 8)*0.05 for c in centers]
+                   ).astype(np.float32)
+xp = np.concatenate([x, np.zeros((56, 8), np.float32)])   # 256 rows / 4
+c_h, a_h, _ = kmeans(x, 4, seed=1)
+for uk in (False, True):
+    c_d, a_d, _ = kmeans_device(xp, 4, seed=1, n_valid=len(x),
+                                use_kernel=uk, mesh=mesh)
+    perm = ((c_d[:, None, :] - c_h[None, :, :]) ** 2).sum(-1).argmin(1)
+    assert sorted(perm.tolist()) == [0, 1, 2, 3], (uk, perm)
+    np.testing.assert_array_equal(perm[a_d], a_h)
+print("SHARDED_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src"),
+                    os.environ.get("PYTHONPATH", "")]))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_OK" in out.stdout
 
 
 # -------------------------------------------------------------- simpoint/cross

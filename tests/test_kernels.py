@@ -340,3 +340,32 @@ def test_kmeans_assign_matches_reference(N, d, K, bn, dtype):
     atol = 1e-3 if dtype == jnp.float32 else 1.0
     np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref), atol=atol,
                                rtol=1e-2)
+
+
+@pytest.mark.parametrize("N,d,K,bn,dtype", KM_CASES)
+def test_kmeans_update_matches_reference(N, d, K, bn, dtype):
+    """Fused assignment + segment-reduce kernel vs the jnp oracle,
+    including a masked pad tail (the store's device-matrix shape)."""
+    from repro.kernels.kmeans_assign.ops import kmeans_update
+    from repro.kernels.kmeans_assign.ref import kmeans_update_reference
+    rng = np.random.RandomState(N)
+    x = _rand(rng, (N, d), dtype)
+    c = _rand(rng, (K, d), dtype)
+    valid = jnp.asarray((np.arange(N) < (3 * N) // 4).astype(np.float32))
+    s_k, n_k, i_k = kmeans_update(x, c, valid, block_n=bn, interpret=True)
+    s_r, n_r, i_r = kmeans_update_reference(x, c, valid)
+    # counts are exact integers; sums/inertia accumulate in fp32
+    np.testing.assert_array_equal(np.asarray(n_k), np.asarray(n_r))
+    tol = dict(rtol=1e-4, atol=1e-3) if dtype == jnp.float32 else \
+        dict(rtol=5e-2, atol=1.0)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), **tol)
+    np.testing.assert_allclose(float(i_k), float(i_r[0]), **tol)
+
+
+def test_kmeans_update_none_valid_counts_everything():
+    from repro.kernels.kmeans_assign.ops import kmeans_update
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(100, 8).astype(np.float32))
+    c = jnp.asarray(rng.randn(4, 8).astype(np.float32))
+    _, counts, _ = kmeans_update(x, c, interpret=True)
+    assert float(jnp.sum(counts)) == 100.0
