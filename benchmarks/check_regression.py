@@ -6,20 +6,29 @@ benchmarks/baselines/ and fails (exit 1) when
 
   * a baseline suite has no fresh counterpart (a benchmark silently
     stopped running), or
+  * a baseline (or fresh) JSON is unparseable or carries no wall-time
+    metrics — a malformed baseline must never silently disable its
+    suite's gate, or
   * a wall-time metric present in the baseline is missing from the
     fresh record (a timing silently disappeared), or
   * any wall-time metric regressed by more than the threshold
     (default: fresh > 1.25x baseline).
 
-Wall-time metrics are numeric keys ending in `_us` or `_s`. Records
-carry their regime (`backend` + `pallas_mode`/`kernel_mode`); when the
+Wall-time metrics are numeric keys ending in `_us` or `_s`; when
+`benchmarks.run --repeats N` produced the record they are medians of N
+runs. Records carry their regime (`backend` + `pallas_mode`/
+`kernel_mode`) and a machine `fingerprint` (cpu_count + arch): when the
 fresh regime differs from the baseline's (e.g. a TPU runner vs the CPU
 baseline) the suite's timings are skipped rather than nonsensically
-compared — the gate only ever judges like against like.
+compared, and when the machine fingerprints differ the suite is skipped
+with a VISIBLE warning instead of false-redding — wall times taken on
+different hardware are noise, not signal. The gate only ever judges
+like against like.
 
-Refreshing baselines: download the `bench-json-*` artifact from a green
-main-branch CI run, copy the JSONs over benchmarks/baselines/, and
-commit them (see README "CI gates").
+Refreshing baselines: trigger the `refresh-baselines` workflow (opens a
+PR with re-measured medians), or download the `bench-json-*` artifact
+from a green main-branch CI run, copy the JSONs over
+benchmarks/baselines/, and commit them (see README "CI gates").
 
 Usage:
     python benchmarks/check_regression.py \
@@ -32,7 +41,7 @@ import argparse
 import json
 import os
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 DEFAULT_THRESHOLD = 1.25
 _REGIME_KEYS = ("backend", "pallas_mode", "kernel_mode")
@@ -47,18 +56,49 @@ def _regime(record: Dict) -> Tuple:
     return tuple(record.get(k) for k in _REGIME_KEYS)
 
 
+def _load_record(path: str) -> Tuple[Optional[Dict], Optional[str]]:
+    """-> (record, error). A file that exists but cannot be parsed into
+    a dict is an ERROR, never a silent skip."""
+    try:
+        with open(path) as f:
+            record = json.load(f)
+    except ValueError as e:
+        return None, f"unparseable JSON ({e})"
+    if not isinstance(record, dict):
+        return None, f"expected a JSON object, got {type(record).__name__}"
+    return record, None
+
+
 def compare_suite(name: str, baseline: Dict, fresh: Dict,
                   threshold: float
-                  ) -> Tuple[List[str], List[str], int]:
-    """-> (failures, report lines, metrics compared) for one suite."""
+                  ) -> Tuple[List[str], List[str], int, int]:
+    """-> (failures, report lines, metrics compared, fingerprint skips)
+    for one suite."""
     failures: List[str] = []
     report: List[str] = []
     compared = 0
+    if not any(_is_walltime(k, v) for k, v in baseline.items()):
+        failures.append(
+            f"{name}: baseline carries NO wall-time metrics — a "
+            "malformed/empty baseline would silently disable this "
+            "suite's gate; re-record it")
+        return failures, report, compared, 0
     if _regime(baseline) != _regime(fresh):
         report.append(
             f"  {name}: regime mismatch (baseline {_regime(baseline)} vs "
             f"fresh {_regime(fresh)}) — timings skipped")
-        return failures, report, compared
+        return failures, report, compared, 0
+    base_fp = baseline.get("fingerprint")
+    fresh_fp = fresh.get("fingerprint")
+    if base_fp is not None and fresh_fp is not None and base_fp != fresh_fp:
+        # different machine: medians are not comparable. Skip LOUDLY —
+        # never false-red, never silently pretend the numbers matched.
+        report.append(
+            f"  {name}: WARNING — machine fingerprint mismatch "
+            f"(baseline {base_fp} vs fresh {fresh_fp}); wall times not "
+            "comparable, suite skipped. Run the refresh-baselines "
+            "workflow to re-record baselines for this runner.")
+        return failures, report, compared, 1
     for key, base_val in sorted(baseline.items()):
         if not _is_walltime(key, base_val):
             continue
@@ -82,7 +122,7 @@ def compare_suite(name: str, baseline: Dict, fresh: Dict,
                 f"threshold {threshold:.2f}x)")
             line += "  REGRESSION"
         report.append(line)
-    return failures, report, compared
+    return failures, report, compared, 0
 
 
 def check(baseline_dir: str, fresh_dir: str,
@@ -97,6 +137,7 @@ def check(baseline_dir: str, fresh_dir: str,
         failures.append(f"no baseline suites under {baseline_dir}")
         return failures, report
     compared = 0
+    fp_skips = 0
     for fname in suites:
         name = fname[:-len(".json")]
         fresh_path = os.path.join(fresh_dir, fname)
@@ -104,18 +145,26 @@ def check(baseline_dir: str, fresh_dir: str,
             failures.append(f"{name}: fresh benchmark JSON missing "
                             f"({fresh_path}) — did the suite run?")
             continue
-        with open(os.path.join(baseline_dir, fname)) as f:
-            baseline = json.load(f)
-        with open(fresh_path) as f:
-            fresh = json.load(f)
-        fails, lines, n = compare_suite(name, baseline, fresh, threshold)
+        baseline, err = _load_record(os.path.join(baseline_dir, fname))
+        if err:
+            failures.append(f"{name}: baseline {err}")
+            continue
+        fresh, err = _load_record(fresh_path)
+        if err:
+            failures.append(f"{name}: fresh record {err}")
+            continue
+        fails, lines, n, fp = compare_suite(name, baseline, fresh,
+                                            threshold)
         failures.extend(fails)
         report.extend(lines)
         compared += n
-    if compared == 0 and not failures:
+        fp_skips += fp
+    if compared == 0 and not failures and fp_skips == 0:
         # every suite hit the regime skip (or had no wall-time keys):
         # an always-green gate that compares nothing is a silently
-        # disabled gate — fail loudly so regime-string drift is caught
+        # disabled gate — fail loudly so regime-string drift is caught.
+        # (Explicit fingerprint-mismatch skips already warned above and
+        # are the documented different-machine escape hatch.)
         failures.append(
             "no wall-time metrics were compared at all (regime mismatch "
             "on every suite?) — the gate would be silently disabled; "

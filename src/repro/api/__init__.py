@@ -1,16 +1,22 @@
 # repro.api — the unified SemanticBBV service surface.
-#   store.py      SignatureStore: append-only, device-resident signatures
+#   store.py      SignatureStore: device-resident signatures + lifecycle
 #   knowledge.py  KnowledgeBase: build/attach/estimate over archetypes
+#   lifecycle.py  EvictionPolicy / vacuum: TTL+LRU eviction, compaction
 #   service.py    SemanticBBVService facade + typed ServiceConfig
 from repro.api.knowledge import (
     ASSIGN_IMPLS, BUILD_IMPLS, CPIEstimate, KnowledgeBase,
     assign_signatures, resolve_assign_impl, resolve_build_impl,
 )
+from repro.api.lifecycle import (
+    EvictionPolicy, VacuumReport, select_victims, vacuum,
+)
 from repro.api.service import SemanticBBVService, ServiceConfig
 from repro.api.store import SignatureStore
 
 __all__ = [
-    "ASSIGN_IMPLS", "BUILD_IMPLS", "CPIEstimate", "KnowledgeBase",
-    "SemanticBBVService", "ServiceConfig", "SignatureStore",
-    "assign_signatures", "resolve_assign_impl", "resolve_build_impl",
+    "ASSIGN_IMPLS", "BUILD_IMPLS", "CPIEstimate", "EvictionPolicy",
+    "KnowledgeBase", "SemanticBBVService", "ServiceConfig",
+    "SignatureStore", "VacuumReport", "assign_signatures",
+    "resolve_assign_impl", "resolve_build_impl", "select_victims",
+    "vacuum",
 ]

@@ -136,6 +136,7 @@ class KnowledgeBase:
         self.seed = 0
         self.archetypes: Optional[np.ndarray] = None   # (k, d)
         self.rep_global_idx = np.zeros(0, np.int64)    # rows into the store
+        self.rep_uid = np.zeros(0, np.int64)           # compaction-stable
         self.rep_program: List[str] = []
         self.rep_cpi = np.zeros(0, np.float32)
         self.rep_weight = np.zeros(0, np.float32)
@@ -176,24 +177,46 @@ class KnowledgeBase:
         `device_matrix` (cluster-aligned compatible with "host"),
         optionally sharded over `mesh`'s data axes.
         """
-        if len(self.store) == 0:
+        if self.store.n_alive == 0:
             raise RuntimeError("cannot build a KnowledgeBase over an "
-                               "empty SignatureStore")
+                               "empty SignatureStore (no live rows)")
         impl = resolve_build_impl(impl or self.build_impl)
         self.build_impl = impl   # persist the impl actually used (save())
         x = np.asarray(self.store.signatures, np.float32)
-        if impl == "host":
-            cents, assign, _ = kmeans(x, k, seed=seed)
+        if not self.store.has_tombstones:
+            if impl == "host":
+                cents, assign, _ = kmeans(x, k, seed=seed)
+            else:
+                cents, assign, _ = kmeans_device(
+                    self.store.device_matrix, k, seed=seed,
+                    use_kernel=(impl == "device_kernel"),
+                    n_valid=len(self.store), mesh=mesh)
+            reps = representatives(x, cents, assign)
         else:
-            cents, assign, _ = kmeans_device(
-                self.store.device_matrix, k, seed=seed,
-                use_kernel=(impl == "device_kernel"),
-                n_valid=len(self.store), mesh=mesh)
-        reps = representatives(x, cents, assign)
+            # tombstoned store: dead rows get zero mass. The device path
+            # folds the alive bitmap into the jitted loop's validity
+            # mask (no host filtering); the host path clusters the live
+            # subset and scatters labels back to slot positions.
+            alive = self.store.alive_rows
+            if impl == "host":
+                xa = x[alive]
+                cents, a_alive, _ = kmeans(xa, k, seed=seed)
+                assign = np.full(x.shape[0], -1, a_alive.dtype)
+                assign[alive] = a_alive
+                reps = alive[representatives(xa, cents, a_alive)]
+            else:
+                cents, assign, _ = kmeans_device(
+                    self.store.device_matrix, k, seed=seed,
+                    use_kernel=(impl == "device_kernel"),
+                    n_valid=len(self.store), mesh=mesh,
+                    valid_mask=self.store.device_valid)
+                reps = alive[representatives(x[alive], cents,
+                                             assign[alive])]
         self.k = int(cents.shape[0])
         self.seed = seed
         self.archetypes = cents.astype(np.float32)
         self.rep_global_idx = np.asarray(reps, np.int64)
+        self.rep_uid = np.asarray(self.store.uids[reps], np.int64)
         self.rep_program = [self.store.program_of_row[i] for i in reps]
         self.rep_cpi = self.store.cpis[reps].astype(np.float32)
         self.rep_weight = self.store.weights[reps].astype(np.float32)
@@ -207,7 +230,10 @@ class KnowledgeBase:
         self._attached_nrows.clear()
         self._row_assign_cache = None   # assignments vs OLD archetypes
         for p in self.store.programs:
-            self._record(p, assign[self.store.rows_for(p)])
+            rows = self.store.rows_for(p)
+            if rows.size == 0:          # fully evicted: nothing to record
+                continue
+            self._record(p, assign[rows])
         self._built_version = self.store.version
         return self
 
@@ -223,8 +249,12 @@ class KnowledgeBase:
     def _record(self, program: str, row_assign: np.ndarray) -> np.ndarray:
         """Fingerprint + CPI bookkeeping for a STORED program from its
         per-interval assignments (stamps the row count so streaming adds
-        trigger a re-attach on the next estimate)."""
+        AND evictions trigger a re-attach on the next estimate)."""
         rows = self.store.rows_for(program)
+        if rows.size == 0:
+            raise ValueError(
+                f"program {program!r} has no live rows in the store "
+                "(every interval was evicted) — cannot fingerprint")
         weights = self.store.weights[rows]
         cpis = self.store.cpis[rows]
         f, wp = self._fingerprint(row_assign, weights)
@@ -309,6 +339,62 @@ class KnowledgeBase:
         self._row_assign_cache = (self.store.version, a)
         return a
 
+    # ----------------------------------------------------- store lifecycle
+    def apply_remap(self, remap: np.ndarray) -> int:
+        """Consume a `SignatureStore.compact()` old->new row remap so the
+        knowledge base stays valid across compaction: representative rows
+        move to their new positions, fingerprints of programs the
+        compaction dropped entirely are pruned, and representatives whose
+        rows were evicted are re-pinned to the nearest live member of
+        their archetype via ONE extra whole-store assignment pass.
+
+        Recorded `rep_cpi`/`rep_weight` are KEPT even when re-pinning:
+        they are the results of the one-time archetype simulation, which
+        evicting the interval row does not undo — so `estimate()` on
+        untouched programs is bit-identical across a vacuum.
+
+        Returns the number of representatives that had to be re-pinned.
+        """
+        self._require_built()
+        remap = np.asarray(remap, np.int64)
+        old = self.rep_global_idx
+        safe = np.clip(old, 0, max(remap.shape[0] - 1, 0))
+        self.rep_global_idx = np.where(
+            (old >= 0) & (old < remap.shape[0]), remap[safe], -1)
+        self._row_assign_cache = None
+        for p in list(self.fingerprints):
+            if p not in self.store:        # compaction dropped the program
+                del self.fingerprints[p]
+                self.est_cpi.pop(p, None)
+                self.true_cpi.pop(p, None)
+                self._attached_nrows.pop(p, None)
+        return self._repin_dead_reps()
+
+    def _repin_dead_reps(self) -> int:
+        """Re-pin every representative whose store row is gone (idx -1)
+        to the nearest LIVE member of its archetype: one whole-store
+        assignment pass (`_all_row_assign`) + one segment-reduce
+        (`representatives`) shared by all dead reps."""
+        dead = np.flatnonzero(self.rep_global_idx < 0)
+        if dead.size == 0:
+            return 0
+        alive = self.store.alive_rows
+        if alive.size == 0:
+            # store emptied: nothing to pin to. Leave the indices at -1
+            # (estimate() paths raise cleanly); the next build() over a
+            # re-populated store replaces the representatives wholesale.
+            return 0
+        x = np.asarray(self.store.signatures, np.float32)
+        row_assign = self._all_row_assign()
+        reps = alive[representatives(x[alive], self.archetypes,
+                                     row_assign[alive])]
+        self.rep_global_idx[dead] = reps[dead]
+        self.rep_uid[dead] = self.store.uids[reps[dead]]
+        for j in dead:
+            self.rep_program[j] = self.store.program_of_row[
+                self.rep_global_idx[j]]
+        return int(dead.size)
+
     def estimate(self, program: str) -> CPIEstimate:
         """Typed CPI estimate; (re-)attaches the program on demand if it
         was ingested — or gained new rows — after its last fingerprint."""
@@ -344,6 +430,7 @@ class KnowledgeBase:
             "rep_cpi": self.rep_cpi,
             "rep_weight": self.rep_weight,
             "rep_global_idx": self.rep_global_idx,
+            "rep_uid": self.rep_uid,
         }
         meta = {
             "k": self.k, "seed": self.seed,
@@ -367,11 +454,13 @@ class KnowledgeBase:
         import msgpack
         with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
             manifest = msgpack.unpackb(f.read())
+        keys = ["archetypes", "rep_cpi", "rep_weight", "rep_global_idx"]
+        if "rep_uid" in manifest["shapes"]:   # pre-lifecycle checkpoints
+            keys.append("rep_uid")
         template = {
             k: np.zeros(manifest["shapes"][k],
                         np.dtype(manifest["dtypes"][k]))
-            for k in ("archetypes", "rep_cpi", "rep_weight",
-                      "rep_global_idx")
+            for k in keys
         }
         tree, _, meta = restore_checkpoint(path, template)
         kb = cls(store, assign_impl=meta["assign_impl"],
@@ -383,6 +472,20 @@ class KnowledgeBase:
         kb.rep_weight = np.asarray(tree["rep_weight"], np.float32)
         kb.rep_global_idx = np.asarray(tree["rep_global_idx"], np.int64)
         kb.rep_program = list(meta["rep_program"])
+        if "rep_uid" in tree:
+            # uids are the compaction-stable handle: re-resolve each
+            # representative's CURRENT row position; rows that were
+            # evicted/compacted away since save re-pin below
+            kb.rep_uid = np.asarray(tree["rep_uid"], np.int64)
+            kb.rep_global_idx = store.rows_of_uids(kb.rep_uid)
+        else:
+            ok = ((kb.rep_global_idx >= 0)
+                  & (kb.rep_global_idx < len(store)))
+            kb.rep_uid = np.where(
+                ok, store.uids[np.clip(kb.rep_global_idx, 0,
+                                       max(len(store) - 1, 0))], -1)
+        if (kb.rep_global_idx < 0).any():
+            kb._repin_dead_reps()
         kb._built_version = meta["built_version"]
         kb.fingerprints = {p: np.asarray(f, np.float64)
                            for p, f in meta["fingerprints"].items()}

@@ -30,6 +30,7 @@ from typing import Dict, Mapping, Optional, Sequence
 import numpy as np
 
 from repro.api.knowledge import CPIEstimate, KnowledgeBase
+from repro.api.lifecycle import EvictionPolicy, VacuumReport, vacuum
 from repro.api.store import SignatureStore
 from repro.core.bbe import BBEConfig
 from repro.core.pipeline import PipelineConfig, SemanticBBVPipeline
@@ -57,6 +58,9 @@ class ServiceConfig:
     encode_batch: int = 256           # Stage-1 block batch
     signature_batch: int = 512        # Stage-2 interval batch
     store_min_capacity: int = 64      # pad-and-grow floor
+    # store lifecycle: what vacuum() evicts (TTL/LRU over the store's
+    # logical clock; defaults to "nothing" — compaction only)
+    eviction: EvictionPolicy = EvictionPolicy()
 
     def pipeline_config(self) -> PipelineConfig:
         return PipelineConfig(seed=self.seed, bbe=self.bbe, sig=self.sig,
@@ -172,7 +176,28 @@ class SemanticBBVService:
                               weights=[iv.num_instrs for iv in intervals])
 
     def estimate(self, program: str) -> CPIEstimate:
-        return self.kb.estimate(program)
+        est = self.kb.estimate(program)
+        # recency stamp AFTER the query (touch never bumps `version`,
+        # so the whole-store assignment cache stays warm)
+        self.store.touch(self.store.rows_for(program))
+        return est
+
+    # ---------------------------------------------------- store lifecycle
+    def evict(self, program: str) -> int:
+        """Tombstone every live interval row of `program` (reclaimed at
+        the next `vacuum`); returns the number of rows evicted."""
+        return self.store.evict_program(program)
+
+    def vacuum(self, policy: Optional[EvictionPolicy] = None
+               ) -> VacuumReport:
+        """One store-maintenance pass: evict per the policy (default:
+        `ServiceConfig.eviction`), compact tombstones out of the padded
+        device matrix (one device gather; capacity shrinks back to a
+        power of two), and re-pin the knowledge base through the row
+        remap — estimates of untouched programs are bit-identical
+        before/after (recorded archetype CPIs survive eviction)."""
+        return vacuum(self.store, self.kb,
+                      self.cfg.eviction if policy is None else policy)
 
     # -------------------------------------------------------- persistence
     def save(self, directory: str) -> str:
@@ -181,10 +206,18 @@ class SemanticBBVService:
         os.makedirs(directory, exist_ok=True)
         self.store.save(os.path.join(directory, "store"))
         summary = {"programs": self.store.programs,
-                   "intervals": len(self.store), "built": self.kb.built}
+                   "intervals": len(self.store),
+                   "live_intervals": self.store.n_alive,
+                   "built": self.kb.built}
         if self.kb.built:
+            # estimate() BEFORE kb.save(): it re-attaches any program
+            # whose live rows changed since the last fingerprint, so the
+            # persisted KB and the summary agree (the reload contract).
+            # Fully-evicted (not yet compacted) programs have nothing to
+            # estimate — registry ghosts until the next vacuum.
+            ests = {p: self.kb.estimate(p) for p in self.store.programs
+                    if self.store.rows_for(p).size}
             self.kb.save(os.path.join(directory, "knowledge"))
-            ests = {p: self.kb.estimate(p) for p in self.store.programs}
             summary.update(
                 k=self.kb.k,
                 avg_accuracy=self.kb.avg_accuracy,

@@ -140,6 +140,44 @@ def kmeans_pp_init(key, x, k: int):
     return cents
 
 
+def kmeans_pp_init_weighted(key, x, k: int, valid):
+    """kmeans++ over an ARBITRARY validity mask (not just a prefix).
+
+    The tombstone path: a store with evicted rows hands its (N,) 0/1
+    alive mask straight to the jitted build and dead rows get zero
+    sampling mass — no host-side filtering or re-upload. The first
+    centroid is a weighted choice over the mask (the prefix init's
+    `randint` cannot express holes), so this init is NOT bit-compatible
+    with `kmeans_pp_init_masked`; post-`compact()` stores are dense
+    again and take the prefix path.
+    """
+    n = x.shape[0]
+    v = valid.astype(x.dtype)
+    vbool = v > 0
+    n_eff = jnp.maximum(v.sum(), 1.0)
+    first = jax.random.choice(key, n, p=v / jnp.maximum(v.sum(), 1e-30))
+    cents = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+    x2 = jnp.sum(jnp.square(x), axis=-1)
+
+    def body(i, carry):
+        cents, key = carry
+        key, sub = jax.random.split(key)
+        c2 = jnp.sum(jnp.square(cents), axis=-1)
+        d2 = x2[:, None] - 2.0 * (x @ cents.T) + c2[None, :]
+        d2 = jnp.min(
+            d2 + jnp.where(jnp.arange(k)[None, :] < i, 0.0, jnp.inf),
+            axis=1)
+        d2 = jnp.where(vbool, jnp.maximum(d2, 0.0), 0.0)
+        total = d2.sum()
+        probs = jnp.where(total > 0, d2 / jnp.maximum(total, 1e-30),
+                          v / n_eff)
+        nxt = jax.random.choice(sub, n, p=probs)
+        return cents.at[i].set(x[nxt]), key
+
+    cents, _ = jax.lax.fori_loop(1, k, body, (cents, key))
+    return cents
+
+
 def kmeans_pp_init_masked(key, x, k: int, n_valid):
     """kmeans++ over the first `n_valid` rows of a padded matrix.
 
@@ -176,11 +214,15 @@ def kmeans_pp_init_masked(key, x, k: int, n_valid):
 def _fit_one(key, x, k: int, iters: int, use_kernel: bool,
              valid, n_valid, mesh: Optional[Mesh]):
     """Shared seeded-restart body: ++init, `iters` fused steps, final
-    assignment. valid/n_valid None => every row is real."""
-    if n_valid is None:
-        cents = kmeans_pp_init(key, x, k)
-    else:
+    assignment. Three validity modes: n_valid set => prefix mask (the
+    padded store tail); n_valid None but valid set => arbitrary 0/1 mask
+    (tombstoned rows); both None => every row is real."""
+    if n_valid is not None:
         cents = kmeans_pp_init_masked(key, x, k, n_valid)
+    elif valid is not None:
+        cents = kmeans_pp_init_weighted(key, x, k, valid)
+    else:
+        cents = kmeans_pp_init(key, x, k)
 
     def step(cents, _):
         sums, counts, inertia = _update(x, cents, valid, use_kernel, mesh)
@@ -216,7 +258,7 @@ def kmeans_fit(key, x, k: int, iters: int = 25, use_kernel: bool = False,
                    static_argnames=("k", "iters", "use_kernel", "mesh"))
 def kmeans_fit_restarts(keys, x, k: int, iters: int = 25,
                         use_kernel: bool = False, n_valid=None,
-                        mesh: Optional[Mesh] = None):
+                        mesh: Optional[Mesh] = None, valid_mask=None):
     """All restarts in ONE dispatch; best-of-inertia picked on device.
 
     keys: (R, 2) stacked PRNG keys (the host wrapper stacks the same
@@ -224,10 +266,19 @@ def kmeans_fit_restarts(keys, x, k: int, iters: int = 25,
     inertia, best_restart). Restarts run sequentially via lax.map (the
     Pallas ops need no vmap batching rule); each one's data-parallel work
     is sharded over the mesh's data axes when `mesh` is given.
+
+    `valid_mask` ((N,) 0/1, traced) supersedes `n_valid`: rows where it
+    is zero — a tombstoned store's dead rows, not just the padded tail —
+    get zero weight in seeding, every update and the final inertia, all
+    inside the same jitted call (no host-side filtering/gather).
     """
     x = x.astype(jnp.float32)
-    nv = x.shape[0] if n_valid is None else n_valid
-    valid = (jnp.arange(x.shape[0]) < nv).astype(jnp.float32)
+    if valid_mask is not None:
+        nv = None
+        valid = valid_mask.astype(jnp.float32)
+    else:
+        nv = x.shape[0] if n_valid is None else n_valid
+        valid = (jnp.arange(x.shape[0]) < nv).astype(jnp.float32)
 
     def one(key):
         cents, _, inertia = _fit_one(key, x, k, iters, use_kernel,
@@ -259,7 +310,7 @@ def kmeans(x: np.ndarray, k: int, iters: int = 25, seed: int = 0,
 def kmeans_device(x, k: int, iters: int = 25, seed: int = 0,
                   restarts: int = 3, use_kernel: bool = False,
                   n_valid: Optional[int] = None,
-                  mesh: Optional[Mesh] = None
+                  mesh: Optional[Mesh] = None, valid_mask=None
                   ) -> Tuple[np.ndarray, np.ndarray, float]:
     """End-to-end on-device build over a (possibly padded) matrix.
 
@@ -270,6 +321,11 @@ def kmeans_device(x, k: int, iters: int = 25, seed: int = 0,
     (n_valid,) assignment return to the host. Cluster-aligned compatible
     with `kmeans` (seeding uses the expansion form of the distances, so
     last-ulp rounding may differ — cluster structure does not).
+
+    `valid_mask` ((N,) 0/1) extends the prefix `n_valid` mask to
+    arbitrary holes — the tombstone bitmap of a store with evicted rows.
+    The returned assignment still covers rows [0, n_valid); entries at
+    dead rows are meaningless and must be masked by the caller.
     """
     if (mesh is not None and _row_shard_axes(mesh, x.shape[0]) is None
             and _data_axis_size(mesh) > 1):
@@ -284,8 +340,13 @@ def kmeans_device(x, k: int, iters: int = 25, seed: int = 0,
     n = int(xd.shape[0] if n_valid is None else n_valid)
     keys = jnp.stack([jax.random.PRNGKey(seed * 1000 + r)
                       for r in range(restarts)])
-    c, a, inertia, _ = kmeans_fit_restarts(
-        keys, xd, k, iters, use_kernel, jnp.int32(n), mesh)
+    if valid_mask is None:
+        c, a, inertia, _ = kmeans_fit_restarts(
+            keys, xd, k, iters, use_kernel, jnp.int32(n), mesh)
+    else:
+        c, a, inertia, _ = kmeans_fit_restarts(
+            keys, xd, k, iters, use_kernel, None, mesh,
+            valid_mask=jnp.asarray(valid_mask))
     return np.asarray(c), np.asarray(a[:n]), float(inertia)
 
 

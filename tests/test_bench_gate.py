@@ -81,10 +81,11 @@ def test_regime_mismatch_skips_not_fails():
     baseline = dict(BASE)
     fresh = dict(BASE, backend="tpu", kernel_mode="pallas_compiled",
                  device_build_us=BASE["device_build_us"] * 50)
-    failures, report, compared = compare_suite("kmeans_build", baseline,
-                                               fresh, 1.25)
+    failures, report, compared, fp_skips = compare_suite(
+        "kmeans_build", baseline, fresh, 1.25)
     assert failures == []
     assert compared == 0
+    assert fp_skips == 0
     assert any("regime mismatch" in line for line in report)
 
 
@@ -103,6 +104,103 @@ def test_empty_baseline_dir_fails(tmp_path):
     os.makedirs(b)
     failures, _ = check(b, str(tmp_path / "fresh"))
     assert failures and "no baseline suites" in failures[0]
+
+
+def test_malformed_baseline_json_fails(dirs):
+    """Bugfix: a baseline file that exists but cannot be parsed must be
+    a FAILURE (non-zero exit), never a silent suite skip or traceback."""
+    b, f = dirs
+    with open(os.path.join(b, "kmeans_build.json"), "w") as fh:
+        fh.write("{not json")
+    _write(f, "kmeans_build", BASE)
+    failures, _ = check(b, f)
+    assert len(failures) == 1
+    assert "kmeans_build" in failures[0]
+    assert "unparseable" in failures[0]
+    assert main(["--baseline", b, "--fresh", f]) == 1
+
+
+def test_malformed_fresh_json_fails(dirs):
+    b, f = dirs
+    os.makedirs(f, exist_ok=True)
+    with open(os.path.join(f, "kmeans_build.json"), "w") as fh:
+        fh.write("[1, 2,")
+    failures, _ = check(b, f)
+    assert failures and "unparseable" in failures[0]
+
+
+def test_non_object_baseline_fails(dirs):
+    """Valid JSON that is not an object (e.g. `null`, a list) is just as
+    silently gate-disabling as a parse error — also a failure."""
+    b, f = dirs
+    with open(os.path.join(b, "kmeans_build.json"), "w") as fh:
+        fh.write("null")
+    _write(f, "kmeans_build", BASE)
+    failures, _ = check(b, f)
+    assert failures and "expected a JSON object" in failures[0]
+
+
+def test_baseline_without_walltime_metrics_fails(dirs):
+    """A baseline that parsed but lost its timing keys (e.g. `{}`) used
+    to compare nothing for that suite while the overall gate stayed
+    green — it must fail loudly instead."""
+    b, f = dirs
+    _write(b, "kmeans_build", {"backend": "cpu", "config": {"n": 10}})
+    _write(f, "kmeans_build", BASE)
+    failures, _ = check(b, f)
+    assert len(failures) == 1
+    assert "NO wall-time metrics" in failures[0]
+
+
+def test_fingerprint_mismatch_skips_with_warning(dirs):
+    """Noise hardening: medians taken on a different machine are skipped
+    with a visible warning, not false-redded — even when they look like
+    a huge regression."""
+    b, f = dirs
+    _write(b, "kmeans_build",
+           dict(BASE, fingerprint={"cpu_count": 64, "machine": "x86_64"}))
+    fresh = dict(BASE, device_build_us=BASE["device_build_us"] * 50,
+                 fingerprint={"cpu_count": 2, "machine": "x86_64"})
+    _write(f, "kmeans_build", fresh)
+    failures, report = check(b, f)
+    assert failures == []                      # exit 0: not a false red
+    assert any("fingerprint mismatch" in line and "WARNING" in line
+               for line in report)
+    assert main(["--baseline", b, "--fresh", f]) == 0
+
+
+def test_fingerprint_missing_on_either_side_compares(dirs):
+    """Back-compat: pre-fingerprint baselines still gate (no silent
+    skip just because one side lacks the stamp)."""
+    b, f = dirs                                # baseline has none
+    fresh = dict(BASE, device_build_us=BASE["device_build_us"] * 2.0,
+                 fingerprint={"cpu_count": 2, "machine": "x86_64"})
+    _write(f, "kmeans_build", fresh)
+    failures, _ = check(b, f)
+    assert failures and "regressed" in failures[0]
+
+
+def test_matching_fingerprints_compare(dirs):
+    b, f = dirs
+    fp = {"cpu_count": 4, "machine": "aarch64"}
+    _write(b, "kmeans_build", dict(BASE, fingerprint=fp, repeats=5))
+    _write(f, "kmeans_build",
+           dict(BASE, fingerprint=fp, repeats=3,
+                device_build_us=BASE["device_build_us"] * 3))
+    failures, _ = check(b, f)
+    assert failures and "regressed" in failures[0]
+
+
+def test_merge_records_median_of_walltimes():
+    from benchmarks.run import merge_records
+    records = [dict(BASE, device_build_us=us, host_build_us=1000.0 + us)
+               for us in (300.0, 100.0, 200.0)]
+    merged = merge_records(records)
+    assert merged["device_build_us"] == 200.0          # median, not last
+    assert merged["host_build_us"] == 1200.0
+    assert merged["device_speedup"] == BASE["device_speedup"]  # not _us/_s
+    assert merged["config"] == BASE["config"]
+    assert merge_records([BASE]) == BASE
 
 
 def test_main_exit_codes(dirs, capsys):
